@@ -1,0 +1,44 @@
+"""Shared benchmark utilities: trials with 95% CI, servers, CSV."""
+from __future__ import annotations
+
+import math
+import statistics
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+from repro.core.savime import SavimeServer
+from repro.core.staging import StagingServer
+
+
+def ci95(xs: list[float]) -> tuple[float, float]:
+    """(mean, 95% CI half-width)."""
+    m = statistics.fmean(xs)
+    if len(xs) < 2:
+        return m, 0.0
+    s = statistics.stdev(xs)
+    return m, 1.96 * s / math.sqrt(len(xs))
+
+
+@contextmanager
+def fresh_stack(mem_capacity: int = 4 << 30, send_threads: int = 2):
+    sv = SavimeServer().start()
+    st = StagingServer(sv.addr, mem_capacity=mem_capacity,
+                       send_threads=send_threads).start()
+    try:
+        yield sv, st
+    finally:
+        st.stop()
+        sv.stop()
+
+
+def make_buffers(n_files: int, file_bytes: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(file_bytes // 8) for _ in range(n_files)]
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    print(row, flush=True)
+    return row

@@ -1,0 +1,43 @@
+"""Fig 3 repro: elapsed time to staging vs RDMA block size, 1 I/O thread per
+client. Paper claim C1: monotone improvement with block size (per-block
+registration + control RTT amortize)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.client import Dataset, StagingClient
+from benchmarks.common import ci95, csv_row, fresh_stack, make_buffers
+
+
+def run(n_clients=3, n_files=8, file_mb=4, trials=5, io_threads=1,
+        blocks_kb=(256, 1024, 4096, 16384), quiet=False):
+    bufs = make_buffers(n_clients * n_files, file_mb << 20)
+    total = sum(b.nbytes for b in bufs)
+    results = {}
+    for bk in blocks_kb:
+        times = []
+        for t in range(trials):
+            with fresh_stack() as (sv, st):
+                clients = [StagingClient(st.addr, io_threads=io_threads,
+                                         block_size=bk << 10)
+                           for _ in range(n_clients)]
+                t0 = time.perf_counter()
+                for i, cli in enumerate(clients):
+                    for j in range(n_files):
+                        Dataset(f"t{t}c{i}f{j}", "float64", cli).write(
+                            bufs[i * n_files + j])
+                for cli in clients:
+                    cli.sync()
+                times.append(time.perf_counter() - t0)
+                for cli in clients:
+                    cli.close()
+        m, ci = ci95(times)
+        results[bk] = (m, ci)
+        if not quiet:
+            csv_row(f"fig3/block_{bk}KB_t{io_threads}", m * 1e6,
+                    f"GB/s={total / m / 1e9:.2f};ci95={ci * 1e6:.0f}us")
+    return results, total
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Fig 4 repro: same sweep with 4 I/O threads per client. Paper claim C2:
+faster but less stable (wider CI); large blocks damp the instability."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row
+from benchmarks import fig3_blocksize
+
+
+def run(trials=5, quiet=False):
+    r1, total = fig3_blocksize.run(trials=trials, io_threads=1, quiet=True)
+    r4, _ = fig3_blocksize.run(trials=trials, io_threads=4, quiet=True)
+    out = {}
+    for bk in r1:
+        (m1, c1), (m4, c4) = r1[bk], r4[bk]
+        out[bk] = dict(t1=m1, t1_ci=c1, t4=m4, t4_ci=c4,
+                       speedup=m1 / m4,
+                       rel_ci_1=c1 / m1 if m1 else 0.0,
+                       rel_ci_4=c4 / m4 if m4 else 0.0)
+        if not quiet:
+            csv_row(f"fig4/block_{bk}KB", m4 * 1e6,
+                    f"speedup_vs_1thr={m1 / m4:.2f};"
+                    f"relCI_1thr={c1 / m1:.3f};relCI_4thr={c4 / m4:.3f}")
+    return out, total
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Fig 5 repro: elapsed time vs dataset size, fixed block size, 1 thread.
+Paper claim C3: linear scaling."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.client import Dataset, StagingClient
+from benchmarks.common import ci95, csv_row, fresh_stack, make_buffers
+
+
+def run(sizes_mb=(16, 32, 64, 128), block_kb=16384, trials=4, quiet=False):
+    points = []
+    for mb in sizes_mb:
+        n_files = max(mb // 8, 1)
+        bufs = make_buffers(n_files, (mb // n_files) << 20, seed=mb)
+        times = []
+        for t in range(trials):
+            with fresh_stack() as (sv, st):
+                cli = StagingClient(st.addr, io_threads=1,
+                                    block_size=block_kb << 10)
+                t0 = time.perf_counter()
+                for j, b in enumerate(bufs):
+                    Dataset(f"s{mb}t{t}f{j}", "float64", cli).write(b)
+                cli.sync()
+                times.append(time.perf_counter() - t0)
+                cli.close()
+        m, ci = ci95(times)
+        points.append((mb, m, ci))
+        if not quiet:
+            csv_row(f"fig5/size_{mb}MB", m * 1e6, f"ci95={ci * 1e6:.0f}us")
+    # linear fit R^2 (claim C3)
+    x = np.array([p[0] for p in points], float)
+    y = np.array([p[1] for p in points], float)
+    a, b = np.polyfit(x, y, 1)
+    r2 = 1 - ((y - (a * x + b)) ** 2).sum() / ((y - y.mean()) ** 2).sum()
+    if not quiet:
+        csv_row("fig5/linear_fit", a * 1e6, f"R2={r2:.4f}")
+    return points, r2
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale-ish sizes (slower)")
+    args = ap.parse_args()
+
+    from benchmarks import (fig3_blocksize, fig4_threads, fig5_scaling,
+                            fig6_baselines, roofline)
+
+    print("name,us_per_call,derived")
+    if args.full:
+        fig3_blocksize.run(n_clients=5, n_files=16, file_mb=8, trials=5)
+        fig4_threads.run(trials=5)
+        fig5_scaling.run(sizes_mb=(32, 64, 128, 256), trials=5)
+        fig6_baselines.run(n_files=16, file_mb=8, trials=5)
+    else:
+        fig3_blocksize.run(n_clients=2, n_files=4, file_mb=4, trials=3,
+                           blocks_kb=(256, 1024, 4096, 16384))
+        fig4_threads.run(trials=3)
+        fig5_scaling.run(sizes_mb=(8, 16, 32, 64), trials=3)
+        fig6_baselines.run(n_files=8, file_mb=4, trials=3)
+    roofline.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Batched serving example: prefill a batch of prompts, decode tokens with a
+donated KV cache, greedy sampling — the inference path the decode_* dry-run
+shapes lower (reduced config on CPU; --mesh single/multi on hardware).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.launch.mesh import make_debug_mesh
+from repro.models import Model
+from repro.train import ServeSetup
+
+cfg = get_config("qwen2-72b").smoke()
+model = Model(cfg)
+mesh = make_debug_mesh(1, 1)
+setup = ServeSetup(model, mesh, global_batch=4)
+
+params = model.init(jax.random.PRNGKey(0))
+B, S, N_NEW = 4, 48, 16
+prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                             cfg.vocab_size)
+
+prefill = jax.jit(setup.prefill_fn(max_len=S + N_NEW))
+decode = jax.jit(setup.decode_fn(), donate_argnums=(1,))
+
+with jax.set_mesh(mesh):
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, {"tokens": prompts})
+    tok = jnp.argmax(logits, -1)[:, None]
+    t_prefill = time.perf_counter() - t0
+
+    out = [tok]
+    t0 = time.perf_counter()
+    for i in range(N_NEW - 1):
+        pos = jnp.full((B,), S + i, jnp.int32)
+        logits, cache = decode(params, cache, {"tokens": tok, "pos": pos})
+        tok = jnp.argmax(logits, -1)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.perf_counter() - t0
+
+gen = jnp.concatenate(out, axis=1)
+print(f"prefill {B}x{S} in {t_prefill * 1e3:.0f} ms; "
+      f"{N_NEW - 1} decode steps in {t_decode * 1e3:.0f} ms "
+      f"({t_decode / (N_NEW - 1) * 1e3:.1f} ms/tok incl. dispatch)")
+print("generated token ids (batch 0):", gen[0].tolist())
+assert gen.shape == (B, N_NEW)
+assert bool(jnp.all(gen >= 0)) and bool(jnp.all(gen < cfg.vocab_size))
+print("OK")

@@ -1,0 +1,73 @@
+"""The paper's end-to-end scenario: a running simulation streams per-step
+fields through staging into SAVIME while an ANALYTICAL CLIENT concurrently
+queries past steps — analysis in transit, no files, no post-processing.
+
+    PYTHONPATH=src python examples/simulation_intransit.py
+"""
+import threading
+import time
+
+import numpy as np
+
+from repro.core import (InTransitConfig, InTransitSink, SavimeClient,
+                        SavimeServer, StagingServer)
+from repro.data import SeismicConfig, SeismicField
+
+N_STEPS = 12
+
+savime = SavimeServer().start()
+staging = StagingServer(savime.addr, mem_capacity=2 << 30,
+                        send_threads=2).start()
+sink = InTransitSink(staging.addr,
+                     InTransitConfig(io_threads=2, tar_prefix="sim"))
+
+analysis_rows = []
+stop = threading.Event()
+
+
+def analyst():
+    """Concurrent analytical app: tracks wavefront energy per step."""
+    cli = SavimeClient(savime.addr)
+    seen = -1
+    while not stop.is_set():
+        try:
+            box = cli.run("select(sim_velocity, v)")
+        except Exception:
+            time.sleep(0.1)
+            continue
+        if box.size and box.shape[0] - 1 > seen:
+            seen = box.shape[0] - 1
+            energy = float((box[seen] ** 2).sum())
+            analysis_rows.append((seen, energy))
+            print(f"  [analysis] step {seen}: field energy {energy:10.1f}")
+        time.sleep(0.1)
+
+
+t = threading.Thread(target=analyst, daemon=True)
+t.start()
+
+sim = SeismicField(SeismicConfig(nx=31, ny=64, nz=64))
+t0 = time.perf_counter()
+for step, field in sim.trial(N_STEPS):
+    # the simulation never blocks on analysis:
+    sink.stage_array("velocity", field.astype(np.float32), step=step)
+    sink.flush(timeout=30)      # make it visible promptly for the demo
+    print(f"[sim] step {step} produced + staged "
+          f"({field.nbytes / 1e6:.1f} MB)")
+stop.set()
+t.join(timeout=2)
+
+dt = time.perf_counter() - t0
+# completeness: every staged step is queryable at the end
+cli = SavimeClient(savime.addr)
+final = cli.run("select(sim_velocity, v)")
+print(f"\n{N_STEPS} steps, {sink.staged_bytes / 1e6:.1f} MB staged "
+      f"in {dt:.2f}s ({sink.staged_bytes / dt / 1e6:.0f} MB/s); "
+      f"analysis observed {len(analysis_rows)} steps concurrently; "
+      f"SAVIME holds {final.shape[0]} steps")
+assert final.shape[0] == N_STEPS
+assert len(analysis_rows) >= 1  # concurrency demonstrated (pacing-dependent)
+sink.close()
+staging.stop()
+savime.stop()
+print("OK")

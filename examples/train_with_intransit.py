@@ -1,0 +1,96 @@
+"""End-to-end training driver with the paper's technique as a first-class
+feature: a real model (reduced gemma2 family; swap --arch/--mesh for the
+production config on hardware) trains for a few hundred steps while
+
+  * per-step diagnostics (loss, grad-norm) and int8-packed gradient blocks
+    flow through libstaging -> tmpfs -> SAVIME (asynchronously),
+  * checkpoints are written asynchronously (and staged for analysis),
+  * one step failure is INJECTED and recovered from the last checkpoint.
+
+    PYTHONPATH=src python examples/train_with_intransit.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config
+from repro.core import (InTransitConfig, InTransitSink, SavimeClient,
+                        SavimeServer, StagingServer)
+from repro.data import DataConfig, SyntheticLM, device_put_batch
+from repro.launch.mesh import make_debug_mesh
+from repro.models import Model
+from repro.runtime import Supervisor, SupervisorConfig
+from repro.train import TrainConfig, TrainSetup
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=200)
+ap.add_argument("--arch", default="gemma2-27b")
+args = ap.parse_args()
+
+cfg = get_config(args.arch).smoke()
+model = Model(cfg)
+mesh = make_debug_mesh(1, 1)
+print(f"[setup] {cfg.name}: {cfg.param_count() / 1e6:.2f}M params")
+
+savime = SavimeServer().start()
+staging = StagingServer(savime.addr).start()
+sink = InTransitSink(staging.addr,
+                     InTransitConfig(io_threads=2, tar_prefix="train"))
+
+setup = TrainSetup(model, mesh, TrainConfig(
+    peak_lr=5e-3, warmup_steps=20, total_steps=args.steps,
+    egress="grads_int8", egress_blocks=16))
+state = setup.init_state(jax.random.PRNGKey(0))
+import tempfile
+ckpt = CheckpointManager(tempfile.mkdtemp(prefix="repro-example-ckpt-"),
+                         sink=None)
+
+step_jit = jax.jit(setup.step_fn(), donate_argnums=(0,))
+dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8)
+raw = SyntheticLM(dc).batches()
+
+
+def wrapped_step(state, batch):
+    state, metrics, egress = step_jit(state, batch)
+    step = int(jax.device_get(state["step"]))
+    # in-transit egress: never blocks the hot loop
+    sink.stage_array("diag", np.asarray(egress["diag"]), step=step)
+    if "blocks" in egress:
+        sink.stage_array("grad_blocks", np.asarray(egress["blocks"]),
+                         step=step)
+    return state, metrics, egress
+
+
+def batches():
+    for b in raw:
+        yield device_put_batch(b, mesh, setup.rules)
+
+
+sup = Supervisor(wrapped_step, ckpt, SupervisorConfig(ckpt_every=50))
+t0 = time.perf_counter()
+with jax.set_mesh(mesh):
+    state = sup.run(state, batches(), args.steps,
+                    abstract_state=setup.abstract_state(),
+                    shardings=setup.state_shardings(),
+                    fail_at={args.steps // 2})   # injected failure
+dt = time.perf_counter() - t0
+
+losses = [m["loss"] for m in sup.metrics_log if "loss" in m]
+print(f"[train] {args.steps} steps in {dt:.1f}s; "
+      f"loss {losses[0]:.3f} -> {losses[-1]:.3f}; "
+      f"restarts={sup.restarts}")
+assert losses[-1] < losses[0]
+assert sup.restarts == 1
+
+sink.flush()
+cli = SavimeClient(savime.addr)
+diag = cli.run("select(train_diag, v)")
+print(f"[analysis] SAVIME holds {diag.shape[0]} step diagnostics; "
+      f"last staged loss={diag[-1, 0]:.3f}")
+sink.close()
+staging.stop()
+savime.stop()
+print("OK")

@@ -1,0 +1,293 @@
+"""Architecture / run configuration system.
+
+Every assigned architecture is a frozen ``ArchConfig``; input shapes are
+``ShapeConfig``s. ``input_specs()`` produces ShapeDtypeStruct stand-ins for the
+multi-pod dry-run (no allocation). Reduced smoke variants are derived with
+``cfg.smoke()`` so smoke tests always exercise the same layer kinds / pattern
+as the full config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # expert hidden (ffn) width
+    capacity_factor: float = 1.25
+    dense_residual: bool = False  # arctic: dense MLP in parallel with MoE
+    shared_expert: bool = False   # llama4: always-on shared expert
+    router_dtype: str = "float32"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0              # 0 -> ceil(d_model / 16)
+
+    def resolved_dt_rank(self, d_model: int) -> int:
+        return self.dt_rank or -(-d_model // 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_rnn: int = 0                # 0 -> d_model
+    d_conv: int = 4
+    block_width: int = 0          # diagonal-block input gates; 0 -> d_rnn
+
+
+# ---------------------------------------------------------------------------
+# ArchConfig
+# ---------------------------------------------------------------------------
+
+# Block kinds understood by models/transformer.py
+BLOCK_KINDS = ("dense", "local", "global", "moe", "mamba", "rglru")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    layer_pattern: tuple[str, ...] = ("dense",)
+
+    # attention details
+    attn_window: int = 0          # local-attention window (0 = no local layers)
+    pad_heads_to: int = 0         # inert zero-init q heads so heads % TP == 0
+                                  # (kills GSPMD mid-head score all-reduces;
+                                  #  must keep pad_heads_to % n_kv_heads == 0)
+    qkv_bias: bool = False
+    attn_softcap: float = 0.0     # gemma2 attention logit soft-capping
+    logit_softcap: float = 0.0    # gemma2 final-logit soft-capping
+    qk_norm: bool = False         # gemma3 rms-norm on q/k
+    query_scale: float = 0.0      # 0 -> 1/sqrt(head_dim)
+    rope_theta: float = 10_000.0
+
+    # MLP
+    mlp_act: str = "silu"         # silu (swiglu) | gelu (geglu) | relu (plain)
+    mlp_glu: bool = True
+
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+
+    # embedding / head
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False   # gemma family: * sqrt(d_model)
+    norm_eps: float = 1e-6
+    post_norms: bool = False         # gemma2/3: post-attn + post-ffn norms
+
+    # modality frontend (stub; see DESIGN.md)
+    frontend: str = ""               # "" | "audio_frames" | "vision_patches"
+    n_prefix: int = 0                # prefix embeddings prepended (paligemma patches)
+    prefix_bidirectional: bool = False
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+
+    # training-scale controls
+    remat: str = "full"              # none | full | dots
+    scan_layers: bool = True
+    attn_chunk: int = 1024           # chunked-flash query/kv chunk for long seqs
+
+    # ---------------------------------------------------------------
+    def __post_init__(self):
+        assert all(k in BLOCK_KINDS for k in self.layer_pattern), self.layer_pattern
+        if any(k == "moe" for k in self.layer_pattern):
+            assert self.moe is not None
+        if any(k == "mamba" for k in self.layer_pattern):
+            assert self.ssm is not None
+        if any(k == "rglru" for k in self.layer_pattern):
+            assert self.rglru is not None
+        if any(k == "local" for k in self.layer_pattern):
+            assert self.attn_window > 0
+
+    # -- derived -----------------------------------------------------
+    @property
+    def layer_kinds(self) -> tuple[str, ...]:
+        """Kind of every layer, 0..n_layers-1 (pattern tiled + truncated)."""
+        p = self.layer_pattern
+        reps = -(-self.n_layers // len(p))
+        return (p * reps)[: self.n_layers]
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm.expand * self.d_model if self.ssm else 0
+
+    @property
+    def d_rnn(self) -> int:
+        if not self.rglru:
+            return 0
+        return self.rglru.d_rnn or self.d_model
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when the pattern contains a bounded-cost mixer (local
+        window / SSM / RG-LRU): such hybrids run long_500k with the few
+        global layers' KV caches sequence-sharded over `data` (SP decode).
+        Pure full-attention archs (incl. full-attn MoE) skip it
+        (DESIGN.md §5)."""
+        return any(k in ("local", "mamba", "rglru")
+                   for k in self.layer_pattern)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks), for 6ND roofline."""
+        return _param_count(self, active_only=False)
+
+    def active_param_count(self) -> int:
+        return _param_count(self, active_only=True)
+
+    # -- reduced variant ----------------------------------------------
+    def smoke(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        period = len(self.layer_pattern)
+        n_layers = period + 1 if self.n_layers > period else period  # period + remainder
+        kw: dict[str, Any] = dict(
+            n_layers=n_layers,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 2) if self.n_kv_heads < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            attn_window=min(self.attn_window, 32) if self.attn_window else 0,
+            attn_chunk=32,
+            n_prefix=min(self.n_prefix, 4),
+            remat="none",
+        )
+        if self.moe:
+            kw["moe"] = dataclasses.replace(self.moe, n_experts=8, d_expert=96)
+        if self.ssm:
+            kw["ssm"] = dataclasses.replace(self.ssm, d_state=8)
+        if self.rglru:
+            kw["rglru"] = dataclasses.replace(self.rglru, d_rnn=64, block_width=32)
+        return dataclasses.replace(self, name=self.name + "-smoke", **kw)
+
+
+def _param_count(cfg: ArchConfig, active_only: bool) -> int:
+    M, V = cfg.d_model, cfg.vocab_size
+    n = V * M  # embedding
+    if not cfg.tie_embeddings:
+        n += V * M
+    for kind in cfg.layer_kinds:
+        if kind in ("dense", "local", "global", "moe"):
+            # attention
+            n += M * cfg.n_heads * cfg.head_dim * 2          # q, o
+            n += M * cfg.n_kv_heads * cfg.head_dim * 2       # k, v
+        if kind in ("dense", "local", "global"):
+            n += M * cfg.d_ff * (3 if cfg.mlp_glu else 2)
+        elif kind == "moe":
+            m = cfg.moe
+            e = m.top_k if active_only else m.n_experts
+            n += e * M * m.d_expert * (3 if cfg.mlp_glu else 2)
+            if m.shared_expert:
+                n += M * m.d_expert * (3 if cfg.mlp_glu else 2)
+            if m.dense_residual:
+                n += M * cfg.d_ff * (3 if cfg.mlp_glu else 2)
+            n += M * m.n_experts                              # router
+        elif kind == "mamba":
+            s = cfg.ssm
+            di, dr = cfg.d_inner, s.resolved_dt_rank(M)
+            n += M * 2 * di            # in_proj
+            n += di * s.d_conv         # conv
+            n += di * (dr + 2 * s.d_state)  # x_proj
+            n += dr * di               # dt_proj
+            n += di * s.d_state + 2 * di    # A_log, D, dt bias-ish
+            n += di * M                # out_proj
+        elif kind == "rglru":
+            dr = cfg.d_rnn
+            n += M * dr * 2            # x, y branches in
+            n += dr * cfg.rglru.d_conv
+            n += 2 * dr * (cfg.rglru.block_width or dr)  # input/recurrent gates
+            n += dr * M                # out
+            n += M * cfg.d_ff * (3 if cfg.mlp_glu else 2)  # block MLP
+        n += 2 * M                     # pre-norms (approx; post_norms ignored)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """(applicable, reason-if-not). DESIGN.md §5."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: 500k context skipped (DESIGN.md §5)"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this (arch, shape).
+
+    No device allocation — used by the dry-run and by jax.eval_shape.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode: one new token with a KV cache of seq_len (built separately)
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        specs["pos"] = jax.ShapeDtypeStruct((B,), i32)
+    if cfg.n_prefix:
+        dt = jnp.dtype(cfg.compute_dtype)
+        specs["prefix_embed"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_prefix, cfg.d_model), dt
+        )
+    return specs
+
+
+def flops_per_step(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D = tokens this step.
+
+    Train counts fwd+bwd (6ND); prefill/decode are forward-only (2ND).
+    """
+    n = cfg.active_param_count() if cfg.moe else cfg.param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

@@ -1,0 +1,10 @@
+# The paper's primary contribution: asynchronous in-transit staging from
+# compute jobs to an in-memory analytical array DBMS (SAVIME/TARS), with
+# RDMA-emulated one-sided block writes, tmpfs staging + disk fallback,
+# FCFS send pools, and sendfile/splice forwarding. See DESIGN.md.
+from repro.core.blocks import TransferCostModel, plan_blocks, vmem_tile  # noqa: F401
+from repro.core.client import Dataset, StagingClient  # noqa: F401
+from repro.core.intransit import InTransitConfig, InTransitSink  # noqa: F401
+from repro.core.savime import SavimeClient, SavimeEngine, SavimeServer  # noqa: F401
+from repro.core.staging import StagingServer  # noqa: F401
+from repro.core.tars import TAR, Attribute, Dimension  # noqa: F401

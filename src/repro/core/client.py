@@ -1,0 +1,150 @@
+"""libstaging — the paper's client library (§3.2: server / communicator /
+dataset), Python/NumPy edition of the C++ API in Listing 1:
+
+    st = StagingClient("127.0.0.1:3221", io_threads=1, block_size=256 << 20)
+    st.run_savime("create_tar(...);")
+    ds = Dataset("D", "float64", st)
+    ds.write(v)            # non-blocking: enqueue + return
+    st.sync()              # block until all writes reached staging
+    st.run_savime("load_subtar(...);")
+
+`write` pushes a task to the communicator's local queue; a pool of I/O
+threads consumes tasks (producer-consumer). The buffer must not be mutated
+until sync() returns (it is pinned by reference until sent).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core import wire
+from repro.core.blocks import plan_blocks
+from repro.core.queues import FCFSPool, TaskHandle
+from repro.core.rdma import RdmaWriter
+
+Buf = Union[np.ndarray, bytes, bytearray, memoryview]
+
+
+class Communicator:
+    """Manages the task queue + I/O thread pool (not user-facing)."""
+
+    def __init__(self, addr: str, io_threads: int, block_size: int,
+                 straggler_timeout: Optional[float] = None):
+        self.addr = addr
+        self.block_size = block_size
+        self._pool = FCFSPool(io_threads, "libstaging-io",
+                              straggler_timeout=straggler_timeout)
+        self._local = threading.local()
+
+    def _conn(self):
+        sock = getattr(self._local, "sock", None)
+        if sock is None:  # one control connection (≈ RC QP) per I/O thread
+            sock = wire.connect(self.addr)
+            self._local.sock = sock
+        return sock
+
+    def _request(self, header: dict, payload=None) -> dict:
+        h, _ = wire.request(self._conn(), header, payload)
+        if not h.get("ok"):
+            raise RuntimeError(f"staging error: {h.get('error')}")
+        return h
+
+    # -- the transfer task (runs on an I/O thread) -----------------------
+    def _send(self, name: str, dtype: str, buf: np.ndarray) -> int:
+        nbytes = buf.nbytes
+        # NB: "nbytes" is reserved by the wire framing; use "size"
+        h = self._request({"op": "write_req", "name": name, "dtype": dtype,
+                           "size": nbytes})
+        writer = RdmaWriter(h["path"], nbytes)
+        try:
+            flat = buf.reshape(-1).view(np.uint8)
+            for off, size in plan_blocks(nbytes, self.block_size):
+                # ask for the remote block (server registers on demand)...
+                grant = self._request({"op": "reg_block",
+                                       "file_id": h["file_id"],
+                                       "offset": off, "size": size})
+                # ...then one-sided RDMA write, no server CPU involved
+                writer.write(grant["offset"], flat[off:off + size],
+                             grant["rkey"])
+            # two-sided sync message: no more remote ops on this MR
+            self._request({"op": "client_sync", "file_id": h["file_id"]})
+        finally:
+            writer.close()
+        return nbytes
+
+    def submit(self, name: str, dtype: str, buf: np.ndarray) -> TaskHandle:
+        return self._pool.submit(self._send, name, dtype, buf,
+                                 name=f"write-{name}")
+
+    def sync(self, timeout: Optional[float] = None) -> None:
+        self._pool.sync(timeout)
+
+    def stop(self) -> None:
+        self._pool.stop()
+
+
+class StagingClient:
+    """The paper's ``staging::server`` handle."""
+
+    def __init__(self, addr: str, io_threads: int = 1,
+                 block_size: int = 64 << 20,
+                 straggler_timeout: Optional[float] = None):
+        self.comm = Communicator(addr, io_threads, block_size,
+                                 straggler_timeout)
+        self._ctrl = wire.connect(addr)
+        self._ctrl_lock = threading.Lock()
+
+    def run_savime(self, q: str):
+        """Proxy a SAVIME operator through staging (compute nodes cannot
+        reach the analytical network directly — paper §3.1)."""
+        with self._ctrl_lock:
+            h, _ = wire.request(self._ctrl, {"op": "run_savime", "q": q})
+        if not h.get("ok"):
+            raise RuntimeError(f"savime error: {h.get('error')}")
+        return h.get("result")
+
+    def sync(self, timeout: Optional[float] = None) -> None:
+        """Block until all queued writes are fully received by staging."""
+        self.comm.sync(timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until staging finished forwarding to SAVIME (benchmarks)."""
+        with self._ctrl_lock:
+            h, _ = wire.request(self._ctrl, {"op": "drain",
+                                             "timeout": timeout})
+        if not h.get("ok"):
+            raise RuntimeError(h.get("error"))
+
+    def stats(self) -> dict:
+        with self._ctrl_lock:
+            h, _ = wire.request(self._ctrl, {"op": "stats"})
+        return h
+
+    def close(self) -> None:
+        self.comm.stop()
+        try:
+            self._ctrl.close()
+        except OSError:
+            pass
+
+
+class Dataset:
+    """The paper's ``staging::dataset``."""
+
+    def __init__(self, name: str, dtype: str, server: StagingClient):
+        self.name = name
+        self.dtype = dtype
+        self.server = server
+        self._handles: list[TaskHandle] = []
+
+    def write(self, buf: Buf, nbytes: Optional[int] = None) -> TaskHandle:
+        """Non-blocking; buffer pinned (by reference) until sync()."""
+        arr = np.frombuffer(buf, dtype=np.uint8) if not isinstance(buf, np.ndarray) \
+            else buf
+        if nbytes is not None:
+            arr = arr.reshape(-1).view(np.uint8)[:nbytes]
+        h = self.server.comm.submit(self.name, self.dtype, arr)
+        self._handles.append(h)
+        return h

@@ -1,0 +1,161 @@
+"""FCFS task queues + I/O thread pools with straggler mitigation.
+
+The paper (§3.1): "Received datasets are queued and a pool of threads sends
+them in a FCFS fashion. Similarly, the client has a queue of datasets and a
+pool of I/O threads sending them to staging."
+
+Beyond the paper (large-scale runnability): speculative re-execution of
+stragglers — a watchdog re-enqueues tasks that exceed `straggler_timeout`
+(transfer tasks are idempotent: same bytes / same dataset name), first
+completion wins; plus bounded retries on failure (fault tolerance for
+transient link errors).
+"""
+from __future__ import annotations
+
+import threading
+import time
+import queue as _queue
+from typing import Any, Callable, Optional
+
+
+class TaskHandle:
+    def __init__(self, fn: Callable, args: tuple, name: str):
+        self.fn = fn
+        self.args = args
+        self.name = name
+        self.done = threading.Event()
+        self.result: Any = None
+        self.error: Optional[BaseException] = None
+        self.attempts = 0
+        self.speculative = 0
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        self._lock = threading.Lock()
+
+    def complete(self, result=None, error=None) -> bool:
+        """First completion wins (duplicate speculative runs are ignored)."""
+        with self._lock:
+            if self.done.is_set():
+                return False
+            self.result, self.error = result, error
+            self.finished_at = time.perf_counter()
+            self.done.set()
+            return True
+
+    def wait(self, timeout: Optional[float] = None):
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"task {self.name} not done")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.finished_at and self.started_at:
+            return self.finished_at - self.started_at
+        return None
+
+
+class FCFSPool:
+    """Fixed pool of worker threads consuming a FIFO queue."""
+
+    def __init__(self, n_threads: int, name: str = "pool",
+                 straggler_timeout: Optional[float] = None,
+                 max_retries: int = 2):
+        self.name = name
+        self.straggler_timeout = straggler_timeout
+        self.max_retries = max_retries
+        self._q: _queue.Queue = _queue.Queue()
+        self._inflight: dict[int, TaskHandle] = {}
+        self._inflight_lock = threading.Lock()
+        self._pending = 0
+        self._pending_lock = threading.Condition()
+        self._stop = threading.Event()
+        self.completed: list[TaskHandle] = []
+        self._threads = [
+            threading.Thread(target=self._worker, name=f"{name}-{i}",
+                             daemon=True)
+            for i in range(n_threads)
+        ]
+        for t in self._threads:
+            t.start()
+        self._watchdog = None
+        if straggler_timeout:
+            self._watchdog = threading.Thread(
+                target=self._watch, name=f"{name}-watchdog", daemon=True)
+            self._watchdog.start()
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, fn: Callable, *args, name: str = "task") -> TaskHandle:
+        h = TaskHandle(fn, args, name)
+        with self._pending_lock:
+            self._pending += 1
+        self._q.put(h)
+        return h
+
+    def sync(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted task completed (paper's st.sync())."""
+        deadline = time.monotonic() + timeout if timeout else None
+        with self._pending_lock:
+            while self._pending > 0:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError(f"{self.name}.sync timed out")
+                self._pending_lock.wait(remaining)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for _ in self._threads:
+            self._q.put(None)
+
+    # -- internals -----------------------------------------------------------
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            h = self._q.get()
+            if h is None:
+                return
+            if h.done.is_set():             # speculative duplicate already won
+                self._q.task_done()
+                continue
+            h.started_at = h.started_at or time.perf_counter()
+            h.attempts += 1
+            tid = id(h)
+            with self._inflight_lock:
+                self._inflight[tid] = h
+            try:
+                res = h.fn(*h.args)
+                first = h.complete(result=res)
+            except BaseException as e:  # noqa: BLE001 — retried below
+                if h.attempts <= self.max_retries and not h.done.is_set():
+                    self._q.put(h)          # bounded retry
+                    first = False
+                else:
+                    first = h.complete(error=e)
+            finally:
+                with self._inflight_lock:
+                    self._inflight.pop(tid, None)
+                self._q.task_done()
+            if first:
+                self.completed.append(h)
+                with self._pending_lock:
+                    self._pending -= 1
+                    self._pending_lock.notify_all()
+
+    def _watch(self) -> None:
+        assert self.straggler_timeout
+        while not self._stop.wait(self.straggler_timeout / 4):
+            now = time.perf_counter()
+            with self._inflight_lock:
+                slow = [h for h in self._inflight.values()
+                        if h.started_at and not h.done.is_set()
+                        and now - h.started_at > self.straggler_timeout
+                        and h.speculative == 0]
+            for h in slow:                  # speculative re-execution
+                h.speculative += 1
+                self._q.put(h)
+
+    # -- stats ----------------------------------------------------------------
+    def latencies(self) -> list[float]:
+        return [h.latency for h in self.completed if h.latency is not None]

@@ -1,0 +1,112 @@
+"""RDMA emulation over POSIX shared memory (/dev/shm mmap).
+
+Faithful to the paper's §3.2 data path on a single Linux host:
+
+  * the staging server ``mmap()``s an in-memory file *without touching the
+    mapped memory or registering it* (lazy);
+  * blocks are *registered on demand* when the client asks for them —
+    emulated by populating the block's pages (page pinning is the dominant
+    cost of ibv_reg_mr) and minting an rkey;
+  * the client maps the same file and performs **one-sided writes** — raw
+    memory stores into the server's region with zero server-CPU involvement
+    (numpy ``copyto`` releases the GIL, so I/O threads truly overlap);
+  * a two-sided sync message (over the TCP control channel, = the RC QP's
+    send/recv) ends the transfer, after which the server may deregister.
+
+What intentionally does NOT transfer from real verbs hardware: QP state
+machines, MTU segmentation, CQ polling (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import mmap
+import os
+import secrets
+import threading
+from typing import Optional
+
+import numpy as np
+
+
+class MemoryRegion:
+    """Server-side registered memory region backed by a (tmpfs) file."""
+
+    def __init__(self, path: str, nbytes: int, create: bool = True):
+        self.path = path
+        self.nbytes = nbytes
+        flags = os.O_RDWR | (os.O_CREAT if create else 0)
+        self._fd = os.open(path, flags, 0o600)
+        if create:
+            os.ftruncate(self._fd, nbytes)
+        self._mm = mmap.mmap(self._fd, nbytes) if nbytes else None
+        self._registered: dict[tuple[int, int], str] = {}
+        self._lock = threading.Lock()
+
+    @property
+    def fd(self) -> int:
+        return self._fd
+
+    def view(self) -> np.ndarray:
+        return np.frombuffer(self._mm, dtype=np.uint8)
+
+    def register_block(self, offset: int, size: int) -> dict:
+        """On-demand registration (paper: "the server register each block as
+        needed before sending the remote memory address information")."""
+        if offset < 0 or offset + size > self.nbytes:
+            raise ValueError(f"block [{offset},{offset + size}) outside MR")
+        with self._lock:
+            key = (offset, size)
+            if key not in self._registered:
+                # populate pages = the pinning cost of ibv_reg_mr
+                v = self.view()[offset:offset + size]
+                v[::mmap.PAGESIZE] = v[::mmap.PAGESIZE]
+                self._registered[key] = secrets.token_hex(4)
+            return {"offset": offset, "size": size,
+                    "rkey": self._registered[key]}
+
+    def deregister_all(self) -> None:
+        with self._lock:
+            self._registered.clear()
+
+    def is_registered(self, offset: int, size: int, rkey: str) -> bool:
+        with self._lock:
+            return self._registered.get((offset, size)) == rkey
+
+    def close(self, unlink: bool = False) -> None:
+        if self._mm is not None:
+            try:
+                self._mm.close()
+            except BufferError:
+                # a numpy view is still exported; the mapping is reclaimed
+                # when the last view dies — safe to continue (file still
+                # unlinked below, memory freed on last unmap)
+                pass
+            self._mm = None
+        if self._fd >= 0:
+            os.close(self._fd)
+            self._fd = -1
+        if unlink:
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+
+
+class RdmaWriter:
+    """Client-side endpoint for one-sided writes into a remote MR."""
+
+    def __init__(self, path: str, nbytes: int):
+        self._mr = MemoryRegion(path, nbytes, create=False)
+        self._view: Optional[np.ndarray] = self._mr.view()
+
+    def write(self, offset: int, buf: np.ndarray | memoryview | bytes,
+              rkey: Optional[str] = None) -> int:
+        """One-sided RDMA write: raw store into the remote region.
+        numpy copyto releases the GIL -> concurrent I/O threads overlap."""
+        src = np.frombuffer(buf, dtype=np.uint8) if not isinstance(buf, np.ndarray) \
+            else buf.view(np.uint8).reshape(-1)
+        np.copyto(self._view[offset:offset + src.size], src)
+        return src.size
+
+    def close(self) -> None:
+        self._view = None  # drop the buffer export before unmapping
+        self._mr.close()

@@ -1,0 +1,253 @@
+"""SAVIME — in-memory array DBMS for simulation data (stub-faithful build).
+
+Implements the subset of SAVIME the paper exercises:
+  * named byte *datasets* ingested over TCP (fast path: the staging server
+    streams them with sendfile);
+  * a TARS catalogue: ``create_tar`` / ``load_subtar`` attach datasets as
+    subtar payloads;
+  * analytical reads: ``select`` (dimension/range filter) and ``aggregate``
+    — "SAVIME API already allows filtering stored data by dimensions and by
+    range" (§6);
+  * concurrent analytical readers (thread-per-connection + TAR RLocks).
+
+The mini query language mirrors the paper's Listing 1 usage:
+    create_tar(velocity, "x:0:200, y:0:500, z:0:500", "v:float64")
+    load_subtar(velocity, D, "0,0,0", "201,501,501", v)
+    select(velocity, v, "0,0,0", "10,10,10")
+    aggregate(velocity, v, mean)
+    drop_tar(velocity)
+"""
+from __future__ import annotations
+
+import re
+import socket
+import threading
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.tars import TAR, Attribute, Dimension
+from repro.core import wire
+
+
+class SavimeError(RuntimeError):
+    pass
+
+
+_ARG_RE = re.compile(r'"([^"]*)"|([^,()\s][^,()]*)')
+
+
+def _parse_call(q: str) -> tuple[str, list[str]]:
+    q = q.strip().rstrip(";")
+    m = re.match(r"(\w+)\s*\((.*)\)\s*$", q, re.S)
+    if not m:
+        raise SavimeError(f"cannot parse query: {q!r}")
+    fn, argstr = m.group(1), m.group(2)
+    args = [a or b for a, b in _ARG_RE.findall(argstr)]
+    return fn, [a.strip() for a in args]
+
+
+class SavimeEngine:
+    """In-process engine (the TCP server wraps this)."""
+
+    def __init__(self):
+        self.tars: dict[str, TAR] = {}
+        self.datasets: dict[str, np.ndarray] = {}
+        self._lock = threading.RLock()
+        self.stats = {"bytes_ingested": 0, "datasets": 0, "queries": 0,
+                      "subtars": 0}
+
+    # -- dataset ingestion (binary path) -----------------------------------
+    def load_dataset(self, name: str, dtype: str, payload) -> None:
+        arr = np.frombuffer(payload, dtype=np.dtype(dtype))
+        with self._lock:
+            self.datasets[name] = arr
+            self.stats["bytes_ingested"] += arr.nbytes
+            self.stats["datasets"] += 1
+
+    # -- query language ------------------------------------------------------
+    def run(self, q: str) -> Any:
+        self.stats["queries"] += 1
+        fn, args = _parse_call(q)
+        handler = getattr(self, f"_q_{fn}", None)
+        if handler is None:
+            raise SavimeError(f"unknown operator {fn!r}")
+        return handler(*args)
+
+    def _q_create_tar(self, name: str, dims: str, attrs: str) -> str:
+        dl = []
+        for d in dims.split(","):
+            parts = d.strip().split(":")
+            dname, lo, hi = parts[0], int(parts[1]), int(parts[2])
+            off = float(parts[3]) if len(parts) > 3 else 0.0
+            stride = float(parts[4]) if len(parts) > 4 else 1.0
+            dl.append(Dimension(dname, lo, hi, off, stride))
+        al = [Attribute(*a.strip().split(":")) for a in attrs.split(",")]
+        with self._lock:
+            if name in self.tars:
+                raise SavimeError(f"tar {name!r} exists")
+            self.tars[name] = TAR(name, dl, al)
+        return "ok"
+
+    def _q_load_subtar(self, tar: str, dataset: str, origin: str,
+                       shape: str, attr: str) -> str:
+        t = self._tar(tar)
+        with self._lock:
+            if dataset not in self.datasets:
+                raise SavimeError(f"dataset {dataset!r} not loaded")
+            arr = self.datasets.pop(dataset)  # move: staging frees its copy too
+        o = tuple(int(x) for x in origin.split(","))
+        s = tuple(int(x) for x in shape.split(","))
+        t.load_subtar(o, s, {attr: arr})
+        self.stats["subtars"] += 1
+        return "ok"
+
+    def _q_select(self, tar: str, attr: str, lo: str = "", hi: str = ""):
+        t = self._tar(tar)
+        lo_t = tuple(int(x) for x in lo.split(",")) if lo else None
+        hi_t = tuple(int(x) for x in hi.split(",")) if hi else None
+        return t.select(attr, lo_t, hi_t)
+
+    def _q_aggregate(self, tar: str, attr: str, op: str,
+                     lo: str = "", hi: str = "") -> float:
+        t = self._tar(tar)
+        lo_t = tuple(int(x) for x in lo.split(",")) if lo else None
+        hi_t = tuple(int(x) for x in hi.split(",")) if hi else None
+        return t.aggregate(attr, op, lo_t, hi_t)
+
+    def _q_drop_tar(self, name: str) -> str:
+        with self._lock:
+            self.tars.pop(name, None)
+        return "ok"
+
+    def _q_list_tars(self) -> str:
+        with self._lock:
+            return ",".join(sorted(self.tars))
+
+    def _tar(self, name: str) -> TAR:
+        with self._lock:
+            if name not in self.tars:
+                raise SavimeError(f"no tar {name!r}")
+            return self.tars[name]
+
+
+class SavimeServer:
+    """TCP front-end. Ops: query | load_dataset | stats | ping."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self.engine = SavimeEngine()
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind((host, port))
+        self._srv.listen(64)
+        self.addr = f"{host}:{self._srv.getsockname()[1]}"
+        self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._accept_thread: Optional[threading.Thread] = None
+
+    def start(self) -> "SavimeServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="savime-accept", daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return
+            t = threading.Thread(target=self._serve, args=(conn,),
+                                 name="savime-conn", daemon=True)
+            t.start()
+            self._threads.append(t)
+
+    def _serve(self, conn: socket.socket) -> None:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        with conn:
+            while True:
+                try:
+                    header, payload = wire.recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                try:
+                    reply, data = self._handle(header, payload)
+                except Exception as e:  # noqa: BLE001 — report to client
+                    reply, data = {"ok": False, "error": str(e)}, None
+                try:
+                    wire.send_frame(conn, reply, data)
+                except OSError:
+                    return
+
+    def _handle(self, header, payload):
+        op = header.get("op")
+        if op == "ping":
+            return {"ok": True}, None
+        if op == "load_dataset":
+            self.engine.load_dataset(header["name"], header["dtype"], payload)
+            return {"ok": True}, None
+        if op == "query":
+            res = self.engine.run(header["q"])
+            if isinstance(res, np.ndarray):
+                return {"ok": True, "dtype": str(res.dtype),
+                        "shape": list(res.shape)}, memoryview(res).cast("B")
+            return {"ok": True, "result": res}, None
+        if op == "stats":
+            return {"ok": True, **self.engine.stats}, None
+        raise SavimeError(f"unknown op {op!r}")
+
+
+class SavimeClient:
+    """Thin client used by staging + analytical apps (and tests)."""
+
+    def __init__(self, addr: str):
+        self.addr = addr
+        self._sock = wire.connect(addr)
+        self._lock = threading.Lock()
+
+    def run(self, q: str):
+        with self._lock:
+            header, payload = wire.request(self._sock, {"op": "query", "q": q})
+        if not header.get("ok"):
+            raise SavimeError(header.get("error", "?"))
+        if "dtype" in header:
+            return np.frombuffer(payload, header["dtype"]).reshape(header["shape"])
+        return header.get("result")
+
+    def load_dataset(self, name: str, dtype: str, payload) -> None:
+        with self._lock:
+            header, _ = wire.request(
+                self._sock, {"op": "load_dataset", "name": name,
+                             "dtype": dtype}, payload)
+        if not header.get("ok"):
+            raise SavimeError(header.get("error", "?"))
+
+    def load_dataset_from_file(self, name: str, dtype: str, fd: int,
+                               count: int) -> None:
+        """Zero-copy ingest path: sendfile(2)/splice from a (tmpfs) file
+        straight into the SAVIME socket — the paper's staging→SAVIME hop."""
+        with self._lock:
+            wire.send_frame_from_file(
+                self._sock, {"op": "load_dataset", "name": name,
+                             "dtype": dtype}, fd, count)
+            header, _ = wire.recv_frame(self._sock)
+        if not header.get("ok"):
+            raise SavimeError(header.get("error", "?"))
+
+    def stats(self) -> dict:
+        with self._lock:
+            header, _ = wire.request(self._sock, {"op": "stats"})
+        return header
+
+    def close(self) -> None:
+        try:
+            self._sock.close()
+        except OSError:
+            pass

@@ -1,0 +1,193 @@
+"""Staging server — the paper's §3 architecture, component 2 of 2.
+
+Receives datasets from compute-node clients via emulated-RDMA one-sided
+writes into mmap'd in-memory files (tmpfs, capacity-limited, disk
+fallback), then forwards them to SAVIME in the background over TCP with
+sendfile/splice, FCFS, from a pool of send threads. In-memory files are
+unlinked after ingest to release memory (paper §3.2). Also proxies SAVIME
+control commands for clients that cannot reach the analytical network.
+"""
+from __future__ import annotations
+
+import os
+import secrets
+import socket
+import threading
+import time
+from typing import Optional
+
+from repro.core import wire
+from repro.core.queues import FCFSPool
+from repro.core.rdma import MemoryRegion
+from repro.core.savime import SavimeClient
+
+
+class _Dataset:
+    def __init__(self, file_id: str, name: str, dtype: str, nbytes: int,
+                 region: MemoryRegion, in_memory: bool):
+        self.file_id = file_id
+        self.name = name
+        self.dtype = dtype
+        self.nbytes = nbytes
+        self.region = region
+        self.in_memory = in_memory
+        self.received_at: Optional[float] = None
+
+
+class StagingServer:
+    def __init__(self, savime_addr: str, host: str = "127.0.0.1",
+                 port: int = 0, mem_capacity: int = 1 << 30,
+                 mem_dir: Optional[str] = None,
+                 disk_dir: Optional[str] = None,
+                 send_threads: int = 2,
+                 straggler_timeout: Optional[float] = None,
+                 auto_subtar: bool = True):
+        self.savime_addr = savime_addr
+        uid = f"{os.getpid()}-{secrets.token_hex(3)}"
+        self.mem_dir = mem_dir or f"/dev/shm/staging-{uid}"
+        self.disk_dir = disk_dir or f"/tmp/staging-{uid}"
+        os.makedirs(self.mem_dir, exist_ok=True)
+        os.makedirs(self.disk_dir, exist_ok=True)
+        self.mem_capacity = mem_capacity
+        self._mem_used = 0
+        self._alloc_lock = threading.Lock()
+        self._datasets: dict[str, _Dataset] = {}
+        self._send_pool = FCFSPool(send_threads, "staging-send",
+                                   straggler_timeout=straggler_timeout)
+        self._savime_local = threading.local()
+        self.auto_subtar = auto_subtar
+        self.stats = {"datasets": 0, "bytes_in": 0, "bytes_to_savime": 0,
+                      "disk_fallbacks": 0, "registrations": 0}
+
+        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._srv.bind((host, port))
+        self._srv.listen(128)
+        self.addr = f"{host}:{self._srv.getsockname()[1]}"
+        self._stop = threading.Event()
+        self._accept_thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def start(self) -> "StagingServer":
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="staging-accept", daemon=True)
+        self._accept_thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._send_pool.stop()
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+        for ds in list(self._datasets.values()):
+            ds.region.close(unlink=True)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until the send queue is empty (staging→SAVIME finished)."""
+        self._send_pool.sync(timeout)
+
+    # ------------------------------------------------------------------
+    def _savime(self) -> SavimeClient:
+        cli = getattr(self._savime_local, "cli", None)
+        if cli is None:  # one connection per send/serve thread
+            cli = SavimeClient(self.savime_addr)
+            self._savime_local.cli = cli
+        return cli
+
+    def _accept_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve, args=(conn,),
+                             name="staging-conn", daemon=True).start()
+
+    def _serve(self, conn: socket.socket) -> None:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        with conn:
+            while True:
+                try:
+                    header, payload = wire.recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                try:
+                    reply = self._handle(header, payload)
+                except Exception as e:  # noqa: BLE001
+                    reply = {"ok": False, "error": str(e)}
+                try:
+                    wire.send_frame(conn, reply)
+                except OSError:
+                    return
+
+    # ------------------------------------------------------------------
+    def _handle(self, h: dict, payload) -> dict:
+        op = h.get("op")
+        if op == "ping":
+            return {"ok": True}
+        if op == "write_req":
+            return self._op_write_req(h)
+        if op == "reg_block":
+            return self._op_reg_block(h)
+        if op == "client_sync":
+            return self._op_client_sync(h)
+        if op == "run_savime":
+            res = self._savime().run(h["q"])
+            if hasattr(res, "tolist"):
+                res = res.tolist()
+            return {"ok": True, "result": res}
+        if op == "drain":
+            self.drain(h.get("timeout"))
+            return {"ok": True}
+        if op == "stats":
+            return {"ok": True, **self.stats,
+                    "mem_used": self._mem_used,
+                    "queued": len(self._datasets)}
+        raise ValueError(f"unknown op {op!r}")
+
+    def _op_write_req(self, h: dict) -> dict:
+        nbytes = int(h["size"])
+        with self._alloc_lock:
+            in_memory = self._mem_used + nbytes <= self.mem_capacity
+            if in_memory:
+                self._mem_used += nbytes
+            else:
+                self.stats["disk_fallbacks"] += 1  # paper: disk as fallback
+        file_id = secrets.token_hex(8)
+        base = self.mem_dir if in_memory else self.disk_dir
+        path = os.path.join(base, file_id)
+        region = MemoryRegion(path, nbytes, create=True)
+        ds = _Dataset(file_id, h["name"], h.get("dtype", "uint8"), nbytes,
+                      region, in_memory)
+        self._datasets[file_id] = ds
+        return {"ok": True, "file_id": file_id, "path": path,
+                "in_memory": in_memory}
+
+    def _op_reg_block(self, h: dict) -> dict:
+        ds = self._datasets[h["file_id"]]
+        grant = ds.region.register_block(int(h["offset"]), int(h["size"]))
+        self.stats["registrations"] += 1
+        return {"ok": True, **grant}
+
+    def _op_client_sync(self, h: dict) -> dict:
+        ds = self._datasets[h["file_id"]]
+        ds.received_at = time.perf_counter()
+        ds.region.deregister_all()   # paper: undo registration after sync
+        self.stats["datasets"] += 1
+        self.stats["bytes_in"] += ds.nbytes
+        self._send_pool.submit(self._send_to_savime, ds,
+                               name=f"send-{ds.name}")
+        return {"ok": True}
+
+    # -- background forward (FCFS pool) ---------------------------------
+    def _send_to_savime(self, ds: _Dataset) -> None:
+        cli = self._savime()
+        cli.load_dataset_from_file(ds.name, ds.dtype, ds.region.fd, ds.nbytes)
+        self.stats["bytes_to_savime"] += ds.nbytes
+        ds.region.close(unlink=True)  # release tmpfs memory (paper §3.2)
+        self._datasets.pop(ds.file_id, None)
+        if ds.in_memory:
+            with self._alloc_lock:
+                self._mem_used -= ds.nbytes

@@ -1,0 +1,86 @@
+"""Wire protocol shared by SAVIME / staging / clients.
+
+Frame = 8-byte big-endian header length | JSON header | raw payload
+(payload size in header["nbytes"], 0 if none).
+
+``send_frame_from_file`` streams the payload with ``os.sendfile`` — on Linux
+this is the splice/sendfile zero-copy path the paper uses for the
+staging→SAVIME hop (§2: "SAVIME uses standard TCP for control operations
+combined with the splice syscall for sending data").
+"""
+from __future__ import annotations
+
+import json
+import os
+import socket
+import struct
+from typing import Any, Optional
+
+_LEN = struct.Struct(">Q")
+CHUNK = 1 << 20
+
+
+def send_frame(sock: socket.socket, header: dict[str, Any],
+               payload: Optional[memoryview | bytes] = None) -> None:
+    payload = b"" if payload is None else payload
+    header = dict(header, nbytes=len(payload))
+    hb = json.dumps(header).encode()
+    sock.sendall(_LEN.pack(len(hb)) + hb)
+    if len(payload):
+        sock.sendall(payload)
+
+
+def send_frame_from_file(sock: socket.socket, header: dict[str, Any],
+                         fd: int, count: int, offset: int = 0) -> None:
+    """Zero-copy payload path (os.sendfile == splice on Linux).
+
+    Sockets with a timeout are internally non-blocking: sendfile raises
+    EAGAIN when the send buffer fills — wait for writability and resume.
+    """
+    import select
+    header = dict(header, nbytes=count)
+    hb = json.dumps(header).encode()
+    sock.sendall(_LEN.pack(len(hb)) + hb)
+    sent = 0
+    while sent < count:
+        try:
+            n = os.sendfile(sock.fileno(), fd, offset + sent, count - sent)
+        except BlockingIOError:
+            select.select([], [sock], [], 30.0)
+            continue
+        if n == 0:
+            raise ConnectionError("sendfile: peer closed")
+        sent += n
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytearray:
+    buf = bytearray(n)
+    view = memoryview(buf)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[got:], min(n - got, CHUNK))
+        if r == 0:
+            raise ConnectionError("recv: peer closed")
+        got += r
+    return buf
+
+
+def recv_frame(sock: socket.socket) -> tuple[dict[str, Any], bytearray]:
+    hlen = _LEN.unpack(bytes(_recv_exact(sock, 8)))[0]
+    header = json.loads(bytes(_recv_exact(sock, hlen)))
+    payload = _recv_exact(sock, header.get("nbytes", 0)) \
+        if header.get("nbytes") else bytearray()
+    return header, payload
+
+
+def request(sock: socket.socket, header: dict[str, Any],
+            payload: Optional[memoryview | bytes] = None):
+    send_frame(sock, header, payload)
+    return recv_frame(sock)
+
+
+def connect(addr: str, timeout: float = 30.0) -> socket.socket:
+    host, port = addr.rsplit(":", 1)
+    s = socket.create_connection((host, int(port)), timeout=timeout)
+    s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    return s

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, SyntheticLM, device_put_batch  # noqa: F401
+from repro.data.seismic import SeismicConfig, SeismicField  # noqa: F401

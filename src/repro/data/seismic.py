@@ -1,0 +1,52 @@
+"""HPC4e-like synthetic seismic wavefield (the paper's §4 dataset class).
+
+The paper's experiment dataset: 500 trials of a 3D regular 201x501x501
+velocity-field mesh (25e9 points, >100 GB). This generator produces the
+same *kind* of data at configurable scale: a damped traveling-wavefront
+velocity field evolved per time step — the producer side of the in-transit
+pipeline in examples/ and benchmarks/.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SeismicConfig:
+    nx: int = 51
+    ny: int = 126
+    nz: int = 126
+    n_sources: int = 4
+    velocity: float = 0.18       # wavefront speed in grid units / step
+    damping: float = 0.02
+    seed: int = 0
+
+
+class SeismicField:
+    def __init__(self, cfg: SeismicConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        self.sources = rng.uniform(0.1, 0.9, (cfg.n_sources, 3))
+        self.amps = rng.uniform(0.5, 1.5, cfg.n_sources)
+        gx = np.linspace(0, 1, cfg.nx)[:, None, None]
+        gy = np.linspace(0, 1, cfg.ny)[None, :, None]
+        gz = np.linspace(0, 1, cfg.nz)[None, None, :]
+        self._grid = (gx, gy, gz)
+
+    def step(self, t: int) -> np.ndarray:
+        """Velocity field at time step t: superposed expanding shells."""
+        c = self.cfg
+        gx, gy, gz = self._grid
+        field = np.zeros((c.nx, c.ny, c.nz), np.float64)
+        r_t = c.velocity * (t + 1)
+        for (sx, sy, sz), a in zip(self.sources, self.amps):
+            r = np.sqrt((gx - sx) ** 2 + (gy - sy) ** 2 + (gz - sz) ** 2)
+            shell = np.exp(-((r - r_t) ** 2) / (2 * 0.03 ** 2))
+            field += a * np.exp(-c.damping * t) * shell
+        return field
+
+    def trial(self, n_steps: int):
+        for t in range(n_steps):
+            yield t, self.step(t)

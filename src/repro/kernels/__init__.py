@@ -1,0 +1,7 @@
+# Pallas TPU kernels (validated with interpret=True on CPU; the XLA twins
+# in repro.models.* are what the CPU dry-run lowers):
+#   staging_pack    — egress block pack + fused int8 quantize (paper's block
+#                     knob as a BlockSpec tile; §6 data reduction)
+#   flash_attention — online-softmax prefill kernel, GQA via index_map,
+#                     causal block skip, window + softcap
+#   ssm_scan        — mamba1 selective scan, VMEM-resident state

@@ -1,0 +1,122 @@
+"""Flash attention (prefill forward) — Pallas TPU kernel.
+
+Online-softmax attention with VMEM-resident (m, l, acc) carry, GQA via
+BlockSpec index_map (kv block = q head // group — no KV repeat in HBM),
+causal block skipping (fully-masked kv tiles are not computed — the FLOPs
+the XLA rectangle path wastes), optional sliding window and logit softcap
+(gemma2). MXU-aligned tiles: (block_q, d) x (d, block_k).
+
+Grid = (B*Hq, Sq/block_q, Sk/block_k); the kv axis is innermost and
+sequential — the carry lives in VMEM scratch across kv steps.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
+                  scale: float, softcap: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_sc[...] = jnp.full_like(m_sc, NEG_INF)
+        l_sc[...] = jnp.zeros_like(l_sc)
+        acc_sc[...] = jnp.zeros_like(acc_sc)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # block-level skip: causal (kv entirely in the future) or out-of-window
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window:
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 >= q_start - window + 1) \
+            if causal else needed
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (bq, d)
+        k = k_ref[0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_sc[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_sc[...] = l_sc[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0].astype(jnp.float32)              # (bk, d)
+        acc_sc[...] = acc_sc[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_sc[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        l = jnp.maximum(l_sc[...], 1e-30)
+        o_ref[0] = (acc_sc[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("groups", "scale", "softcap", "causal",
+                              "window", "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    groups: int = 1, scale: float = 1.0,
+                    softcap: float = 0.0, causal: bool = True,
+                    window: int = 0, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False):
+    """q: (BHq, Sq, D); k/v: (BHkv, Sk, D) with BHq = BHkv * groups.
+    Layout: head-major (b*Hq + h), so kv index = q index // groups works
+    only when heads are outer dim per batch -> ops.py flattens as
+    (B, H, S, D) -> (B*H, S, D) and passes groups=Hq//Hkv. Returns (BHq, Sq, D)."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    n_q, n_k = Sq // block_q, Sk // block_k
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, softcap=softcap, causal=causal,
+        window=window, block_q=block_q, block_k=block_k, n_k=n_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, qi, ki: (bh // groups, ki, 0)),
+            pl.BlockSpec((1, block_k, D),
+                         lambda bh, qi, ki: (bh // groups, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

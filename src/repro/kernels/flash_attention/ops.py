@@ -1,0 +1,71 @@
+"""Public wrapper: (B,S,H,D)-layout GQA attention with impl dispatch.
+
+impl="pallas": the TPU flash kernel (use interpret=True on CPU).
+impl="xla":    the chunked-flash XLA path from repro.models.attention —
+               what the dry-run lowers.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel, ref
+
+
+def _to_bh(x: jax.Array) -> jax.Array:  # (B,S,H,D) -> (B*H, S, D)
+    B, S, H, D = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+
+
+def _from_bh(x: jax.Array, B: int) -> jax.Array:
+    BH, S, D = x.shape
+    H = BH // B
+    return x.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "causal",
+                                             "window", "impl", "block_q",
+                                             "block_k", "interpret"))
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  scale: float = 0.0, softcap: float = 0.0,
+                  causal: bool = True, window: int = 0,
+                  impl: str = "pallas", block_q: int = 512,
+                  block_k: int = 512, interpret: bool = False) -> jax.Array:
+    """q: (B,S,Hq,D); k/v: (B,S,Hkv,D). Returns (B,S,Hq,D)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    groups = Hq // Hkv
+    scale = scale or D ** -0.5
+    if impl == "xla":
+        from repro.models.attention import flash_attention_xla, make_mask_fn, \
+            local_attention_xla
+        qg = q.reshape(B, Sq, Hkv, groups, D)
+        if window:
+            o = local_attention_xla(qg, k, v, window=window, scale=scale,
+                                    cap=softcap)
+        else:
+            o = flash_attention_xla(
+                qg, k, v, mask_fn=make_mask_fn(causal=causal, window=0,
+                                               prefix=0),
+                scale=scale, cap=softcap, chunk_q=block_q, chunk_k=block_k)
+        return o.reshape(B, Sq, Hq, D)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sq)
+    o = kernel.flash_attention(
+        _to_bh(q), _to_bh(k), _to_bh(v), groups=groups, scale=scale,
+        softcap=softcap, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=interpret)
+    return _from_bh(o, B)
+
+
+def gqa_attention_ref(q, k, v, *, scale=0.0, softcap=0.0, causal=True,
+                      window=0):
+    B, Sq, Hq, D = q.shape
+    groups = Hq // k.shape[2]
+    scale = scale or D ** -0.5
+    o = ref.attention_ref(_to_bh(q), _to_bh(k), _to_bh(v), groups=groups,
+                          scale=scale, softcap=softcap, causal=causal,
+                          window=window)
+    return _from_bh(o, B)

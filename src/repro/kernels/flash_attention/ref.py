@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for flash_attention (dense softmax attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  groups: int = 1, scale: float = 1.0, softcap: float = 0.0,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """Same layout/semantics as kernel.flash_attention."""
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=0)
+        v = jnp.repeat(v, groups, axis=0)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    Sq, Sk = q.shape[1], k.shape[1]
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,86 @@
+"""Selective-scan (mamba1 recurrence) — Pallas TPU kernel.
+
+h_t = exp(dt_t·A) ⊙ h_{t-1} + (dt_t·x_t)·B_t ;  y_t = h_t · C_t
+
+The state h (d_inner × d_state) stays resident in VMEM across the whole
+sequence; the grid walks (batch, d_inner tiles) × sequence chunks with the
+chunk axis innermost/sequential, so HBM traffic is exactly one read of the
+inputs + one write of y (the XLA scan path re-materializes h per chunk
+boundary). d_inner is tiled to the 128-lane width; d_state (16) rides the
+sublane dimension.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(xi_ref, dt_ref, b_ref, c_ref, a_ref, h0_ref, y_ref, hout_ref,
+                h_sc, *, chunk: int, n_chunks: int, d_tile: int, n_state: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_sc[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[...].astype(jnp.float32)                 # (d_tile, N)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t].astype(jnp.float32)        # (d_tile,)
+        xi_t = xi_ref[0, t].astype(jnp.float32)        # (d_tile,)
+        b_t = b_ref[0, t].astype(jnp.float32)          # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)          # (N,)
+        decay = jnp.exp(dt_t[:, None] * a)             # (d_tile, N)
+        h = decay * h + (dt_t * xi_t)[:, None] * b_t[None, :]
+        y_ref[0, t] = jnp.sum(h * c_t[None, :], axis=1).astype(y_ref.dtype)
+        return h
+
+    h_sc[...] = jax.lax.fori_loop(0, chunk, step, h_sc[...])
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit():
+        hout_ref[0] = h_sc[...].astype(hout_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "d_tile", "interpret"))
+def ssm_scan(xi: jax.Array, dt: jax.Array, Bm: jax.Array, Cm: jax.Array,
+             A: jax.Array, h0: jax.Array, *, chunk: int = 64,
+             d_tile: int = 512, interpret: bool = False):
+    """xi, dt: (B,S,di); Bm, Cm: (B,S,N); A: (di,N); h0: (B,di,N) f32.
+    S % chunk == 0, di % d_tile == 0 (ops.py pads). Returns (y, h_last)."""
+    B, S, di = xi.shape
+    N = A.shape[1]
+    assert S % chunk == 0 and di % d_tile == 0, (S, chunk, di, d_tile)
+    n_chunks = S // chunk
+    n_d = di // d_tile
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=n_chunks,
+                               d_tile=d_tile, n_state=N)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, n_d, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, d_tile), lambda b, d, c: (b, c, d)),  # xi
+            pl.BlockSpec((1, chunk, d_tile), lambda b, d, c: (b, c, d)),  # dt
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),       # B
+            pl.BlockSpec((1, chunk, N), lambda b, d, c: (b, c, 0)),       # C
+            pl.BlockSpec((d_tile, N), lambda b, d, c: (d, 0)),            # A
+            pl.BlockSpec((1, d_tile, N), lambda b, d, c: (b, d, 0)),      # h0
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, d_tile), lambda b, d, c: (b, c, d)),  # y
+            pl.BlockSpec((1, d_tile, N), lambda b, d, c: (b, d, 0)),      # h
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), xi.dtype),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((d_tile, N), jnp.float32)],
+        interpret=interpret,
+    )(xi, dt, Bm, Cm, A, h0)
+    return y, h_last

@@ -1,0 +1,41 @@
+"""Public wrapper with padding + impl dispatch (pallas | xla).
+
+impl="xla" = the chunked two-level lax.scan from repro.models.ssm (what the
+dry-run lowers); impl="pallas" = the VMEM-resident TPU kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan import kernel, ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "d_tile", "impl",
+                                             "interpret"))
+def selective_scan(xi, dt, Bm, Cm, A, h0, *, chunk: int = 64,
+                   d_tile: int = 512, impl: str = "pallas",
+                   interpret: bool = False):
+    """xi, dt: (B,S,di); Bm, Cm: (B,S,N); A: (di,N); h0: (B,di,N)."""
+    if impl == "xla":
+        from repro.models.ssm import selective_scan as xla_scan
+        return xla_scan(xi, dt, Bm, Cm, A, h0, chunk=chunk)
+    B, S, di = xi.shape
+    spad = (-S) % chunk
+    dpad = (-di) % min(d_tile, max(di, 128))
+    d_tile = min(d_tile, di + dpad)
+    if spad:  # dt=0 -> identity steps; y rows sliced off
+        xi = jnp.pad(xi, ((0, 0), (0, spad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, spad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, spad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, spad), (0, 0)))
+    if dpad:
+        xi = jnp.pad(xi, ((0, 0), (0, 0), (0, dpad)))
+        dt = jnp.pad(dt, ((0, 0), (0, 0), (0, dpad)))
+        A = jnp.pad(A, ((0, dpad), (0, 0)))
+        h0 = jnp.pad(h0, ((0, 0), (0, dpad), (0, 0)))
+    y, h = kernel.ssm_scan(xi, dt, Bm, Cm, A, h0, chunk=chunk,
+                           d_tile=d_tile, interpret=interpret)
+    return y[:, :S, :di], h[:, :di]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for ssm_scan (naive per-step recurrence)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(xi, dt, Bm, Cm, A, h0):
+    """Same contract as kernel.ssm_scan, step-by-step in fp32."""
+    def step(h, t):
+        xi_t, dt_t, b_t, c_t = t
+        dt32 = dt_t.astype(jnp.float32)
+        decay = jnp.exp(dt32[:, :, None] * A)
+        h = decay * h + (dt32 * xi_t.astype(jnp.float32))[:, :, None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y.astype(xi.dtype)
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (xi, dt, Bm, Cm))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h

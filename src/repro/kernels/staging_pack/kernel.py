@@ -1,0 +1,65 @@
+"""staging_pack — egress pack (+ optional int8 quantize) Pallas TPU kernel.
+
+The paper's RDMA *block* becomes a VMEM-resident tile: the kernel re-tiles a
+2D tensor into block-major layout so every transfer block is contiguous in
+HBM (one DMA descriptor per block on egress), optionally fusing symmetric
+int8 quantization (per-block scale) — the paper's §6 "data reduction at
+staging", pushed all the way into the producing chip.
+
+Tile shape obeys TPU packing: lanes = 128, sublanes a multiple of
+32 bytes / itemsize. Grid = (rows/TR, cols/TC); out block n = i·ncols + j.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pack_kernel(x_ref, o_ref, s_ref, *, quantize: bool):
+    x = x_ref[...]
+    tr, tc = x.shape
+    if quantize:
+        x32 = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(x32))
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(x32 / scale), -127, 127)
+        o_ref[...] = q.astype(o_ref.dtype).reshape(1, tr * tc)
+        s_ref[0, 0] = scale
+    else:
+        o_ref[...] = x.astype(o_ref.dtype).reshape(1, tr * tc)
+        s_ref[0, 0] = jnp.float32(1.0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "out_dtype", "interpret"))
+def pack_blocks(x: jax.Array, *, tile: tuple[int, int] = (256, 128),
+                out_dtype=None, interpret: bool = False):
+    """x: (R, C) with R % tile[0] == 0 == C % tile[1] (ops.py pads).
+
+    Returns (blocks (n_blocks, TR*TC) out_dtype, scales (n_blocks,) f32).
+    out_dtype int8 -> fused quantization.
+    """
+    R, C = x.shape
+    TR, TC = tile
+    assert R % TR == 0 and C % TC == 0, (x.shape, tile)
+    ni, nj = R // TR, C // TC
+    out_dtype = out_dtype or x.dtype
+    quantize = jnp.dtype(out_dtype) == jnp.int8
+
+    blocks, scales = pl.pallas_call(
+        functools.partial(_pack_kernel, quantize=quantize),
+        grid=(ni, nj),
+        in_specs=[pl.BlockSpec((TR, TC), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((1, TR * TC), lambda i, j, nj=nj: (i * nj + j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, nj=nj: (i * nj + j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ni * nj, TR * TC), out_dtype),
+            jax.ShapeDtypeStruct((ni * nj, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return blocks, scales[:, 0]

@@ -1,0 +1,64 @@
+"""jit'd public wrapper: arbitrary-shape arrays -> contiguous egress blocks.
+
+impl="pallas" targets TPU (validated with interpret=True on CPU);
+impl="xla" is the lowering used by the CPU dry-run. Block size in *bytes*
+is the paper's knob; `tile_for_block` converts it to a VMEM tile.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.blocks import vmem_tile
+from repro.kernels.staging_pack import kernel, ref
+
+
+def tile_for_block(block_bytes: int, dtype) -> tuple[int, int]:
+    d = jnp.dtype(dtype)
+    return vmem_tile(block_bytes // d.itemsize, d.itemsize)
+
+
+def _to_2d(x: jax.Array, tc: int) -> tuple[jax.Array, int]:
+    flat = x.reshape(-1)
+    cols = tc
+    pad = (-flat.size) % cols
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, cols), pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_bytes", "out_dtype", "impl",
+                                    "interpret"))
+def pack(x: jax.Array, *, block_bytes: int = 4 << 20,
+         out_dtype=None, impl: str = "xla",
+         interpret: bool = False):
+    """Pack any-shape array into (n_blocks, block_elems) + scales."""
+    out_dtype = out_dtype or x.dtype
+    tr, tc = tile_for_block(block_bytes, out_dtype)
+    x2, _ = _to_2d(x, tc)
+    rpad = (-x2.shape[0]) % tr
+    if rpad:
+        x2 = jnp.pad(x2, ((0, rpad), (0, 0)))
+    if impl == "pallas":
+        return kernel.pack_blocks(x2, tile=(tr, tc), out_dtype=out_dtype,
+                                  interpret=interpret)
+    return ref.pack_blocks_ref(x2, tile=(tr, tc), out_dtype=out_dtype)
+
+
+def unpack(blocks: jax.Array, scales: jax.Array, shape: tuple[int, ...],
+           *, block_bytes: int = 4 << 20, dtype=jnp.float32) -> jax.Array:
+    """Inverse of pack (host/analysis side). Tile geometry is recovered
+    from the block array itself (TC is always the 128-lane width)."""
+    del block_bytes
+    tc = 128
+    tr = blocks.shape[1] // tc
+    n = int(np.prod(shape))
+    rows = -(-n // tc)
+    rows += (-rows) % tr
+    full = ref.unpack_blocks_ref(blocks, scales, (rows, tc), (tr, tc), dtype)
+    return full.reshape(-1)[:n].reshape(shape)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for staging_pack."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pack_blocks_ref(x: jax.Array, *, tile: tuple[int, int] = (256, 128),
+                    out_dtype=None):
+    R, C = x.shape
+    TR, TC = tile
+    ni, nj = R // TR, C // TC
+    out_dtype = out_dtype or x.dtype
+    # block-major re-tiling
+    t = x.reshape(ni, TR, nj, TC).transpose(0, 2, 1, 3).reshape(ni * nj, TR * TC)
+    if jnp.dtype(out_dtype) == jnp.int8:
+        t32 = t.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(t32), axis=1)
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+        q = jnp.clip(jnp.round(t32 / scale[:, None]), -127, 127).astype(jnp.int8)
+        return q, scale.astype(jnp.float32)
+    return t.astype(out_dtype), jnp.ones((ni * nj,), jnp.float32)
+
+
+def unpack_blocks_ref(blocks: jax.Array, scales: jax.Array, shape,
+                      tile: tuple[int, int] = (256, 128), dtype=jnp.float32):
+    R, C = shape
+    TR, TC = tile
+    ni, nj = R // TR, C // TC
+    t = blocks.astype(jnp.float32)
+    if blocks.dtype == jnp.int8:
+        t = t * scales[:, None]
+    return (t.reshape(ni, nj, TR, TC).transpose(0, 2, 1, 3)
+            .reshape(R, C).astype(dtype))

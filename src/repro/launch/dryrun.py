@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) on
+the production meshes, record memory/cost analysis + collective schedule.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all   # full sweep (subprocesses)
+
+Per-cell JSON lands in results/dryrun/<arch>__<shape>__<mesh>.json — the
+roofline reader (benchmarks/roofline.py) consumes these.
+"""
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             opts: str = "") -> dict:
+    import contextlib
+    import dataclasses
+    from repro.configs import SHAPES, get_config, input_specs, \
+        shape_applicable, flops_per_step
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.model import Model
+    from repro.models import layers as layers_lib
+    from repro.train.train_step import TrainSetup, TrainConfig
+    from repro.train.serve_step import ServeSetup
+
+    cfg = get_config(arch)
+    opt_set = set(o for o in opts.split(",") if o)
+    if "comm_remat" in opt_set:   # save post-AR outputs; no bwd re-AR
+        cfg = dataclasses.replace(cfg, remat="comm")
+    micro = 1
+    for o in opt_set:
+        if o.startswith("micro"):
+            micro = int(o[5:])
+        elif o.startswith("padheads"):
+            cfg = dataclasses.replace(cfg, pad_heads_to=int(o[8:]))
+    if "bf16_params" in opt_set:
+        cfg = dataclasses.replace(cfg, param_dtype="bfloat16")
+    lowp = (layers_lib.lowp_collectives(True) if "lowp" in opt_set
+            else contextlib.nullcontext())
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "when": time.strftime("%F %T")}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    specs = input_specs(cfg, shape)
+    t0 = time.time()
+    ctx = lowp
+    ctx.__enter__()
+
+    if shape.kind == "train":
+        setup = TrainSetup(Model(cfg), mesh, TrainConfig(
+            microbatches=micro, fsdp_experts="fsdp" in opt_set))
+        fn = setup.jitted(shape)
+        lowered = fn.lower(setup.abstract_state(), specs)
+    elif shape.kind == "prefill":
+        setup = ServeSetup(Model(cfg), mesh, global_batch=shape.global_batch)
+        fn = setup.jitted_prefill(shape.global_batch, shape.seq_len)
+        lowered = fn.lower(
+            jax.tree.map(lambda s: s, setup.model.abstract_params()), specs)
+    else:  # decode
+        long_ctx = shape.seq_len >= 100_000
+        setup = ServeSetup(Model(cfg), mesh, seq_shard_kv=long_ctx,
+                           global_batch=shape.global_batch)
+        fn = setup.jitted_decode(shape.global_batch, shape.seq_len)
+        cache = setup.abstract_cache(shape.global_batch, shape.seq_len)
+        lowered = fn.lower(setup.model.abstract_params(), cache, specs)
+
+    ctx.__exit__(None, None, None)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    from repro.launch import hlo_analysis
+    deep = hlo_analysis.analyze(hlo)
+
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        # loop-corrected per-device numbers (repro.launch.hlo_analysis;
+        # raw cost_analysis counts while bodies once — kept for reference)
+        flops=deep["flops"],
+        vpu_flops=deep.get("vpu_flops", 0.0),
+        hbm_bytes=deep["hbm_bytes"],
+        raw_cost_flops=float(cost.get("flops", 0.0)),
+        raw_bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        model_flops=flops_per_step(cfg, shape),
+        collectives={"bytes": deep["collective_bytes"],
+                     "counts": deep["collective_counts"],
+                     "total_bytes": deep["collective_total"]},
+        memory={
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        hlo_instr_count=hlo.count("\n"),
+    )
+    return rec
+
+
+def cell_path(arch: str, shape: str, mesh: str, tag: str = "") -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape}__{mesh}{suffix}.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--opts", default="", help="lowp,comm_remat")
+    ap.add_argument("--tag", default="", help="variant suffix for the JSON")
+    args = ap.parse_args()
+
+    if args.all:
+        from repro.configs import ARCH_IDS, SHAPES
+        failures = 0
+        for mesh in ("single", "multi"):
+            for arch in ARCH_IDS:
+                for shape in SHAPES:
+                    p = cell_path(arch, shape, mesh)
+                    if os.path.exists(p) and not args.force:
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mesh,
+                           "--quiet"]
+                    print(f"[dryrun] {arch} x {shape} x {mesh} ...",
+                          flush=True)
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    if r.returncode != 0:
+                        failures += 1
+                        print(r.stdout[-2000:], r.stderr[-4000:], flush=True)
+        print(f"[dryrun] sweep done, {failures} failures")
+        return 1 if failures else 0
+
+    rec = {}
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, opts=args.opts)
+        rec["opts"] = args.opts
+    except Exception as e:  # noqa: BLE001
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+    with open(cell_path(args.arch, args.shape, args.mesh, args.tag), "w") as f:
+        json.dump(rec, f, indent=1)
+    if not args.quiet:
+        print(json.dumps({k: v for k, v in rec.items()
+                          if k != "traceback"}, indent=1))
+    if rec.get("status") == "error":
+        print(rec.get("traceback", ""), file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,112 @@
+"""Mixture-of-Experts with capacity-based top-k dispatch (llama4 / arctic).
+
+GShard-style grouped dispatch: tokens grouped by sequence (train/prefill) or
+into a single group (decode), position-in-expert via in-group cumsum, gather
+to a dense (G, E, C, M) tensor, grouped einsum against expert weights sharded
+over the `model` mesh axis (EP), scatter-add combine. Tokens over capacity
+are dropped (contribute via residual only) — capacity_factor 1.25 default.
+
+GSPMD inserts the routing collectives for the (data-sharded G) ×
+(model-sharded E) transition; replacing them with an explicit shard_map
+all-to-all is a §Perf hillclimb lever (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ACTS, ParamSpec, constrain, mlp, mlp_specs
+
+
+def moe_specs(cfg) -> dict:
+    m = cfg.moe
+    M, E, F = cfg.d_model, m.n_experts, m.d_expert
+    pdt = jnp.dtype(cfg.param_dtype)
+    specs: dict = {
+        "router": ParamSpec((M, E), ("embed", "expert"), jnp.float32),
+        # EP shards the expert axis over `model`; the per-expert ffn dim
+        # stays unsharded (one mesh axis cannot shard two dims)
+        "wi": ParamSpec((E, M, F), ("expert", "embed", "expert_ffn"), pdt),
+        "wo": ParamSpec((E, F, M), ("expert", "expert_ffn", "embed"), pdt),
+    }
+    if cfg.mlp_glu:
+        specs["wg"] = ParamSpec((E, M, F), ("expert", "embed", "expert_ffn"), pdt)
+    if m.shared_expert:
+        specs["shared"] = mlp_specs(M, F, cfg.mlp_glu, pdt)
+    if m.dense_residual:
+        specs["dense"] = mlp_specs(M, cfg.d_ff, cfg.mlp_glu, pdt)
+    return specs
+
+
+def _capacity(T: int, k: int, E: int, factor: float) -> int:
+    return max(1, math.ceil(T * k / E * factor))
+
+
+def moe_block(params: dict, x: jax.Array, *, cfg, rules: dict):
+    """x: (B,S,M). Returns (y, aux_losses dict of scalars)."""
+    m = cfg.moe
+    B, S, M = x.shape
+    E, k = m.n_experts, m.top_k
+    decode = S == 1
+    if decode:                       # one group of B tokens
+        xg = x.reshape(1, B, M)
+    else:                            # group = sequence
+        xg = x
+    G, T, _ = xg.shape
+    C = _capacity(T, k, E, m.capacity_factor)
+
+    # ---- routing (fp32) ----------------------------------------------------
+    logits = jnp.einsum("gtm,me->gte", xg.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                       # (G,T,k)
+    top_w = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- dispatch plan: position-in-expert via in-group cumsum -------------
+    flat_e = top_e.reshape(G, T * k)
+    oh = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)              # (G,Tk,E)
+    pos = (jnp.cumsum(oh, axis=1) * oh).sum(-1)                  # 1-based queue pos
+    keep = (pos >= 1) & (pos <= C)
+    slot = jnp.where(keep, flat_e * C + (pos - 1), E * C)        # E*C = drop
+    tok = jnp.tile(jnp.arange(T)[:, None], (1, k)).reshape(T * k)
+
+    g_idx = jnp.arange(G)[:, None]
+    token_for_slot = jnp.zeros((G, E * C), jnp.int32).at[g_idx, slot].set(
+        jnp.broadcast_to(tok, (G, T * k)), mode="drop")
+    w_for_slot = jnp.zeros((G, E * C), jnp.float32).at[g_idx, slot].set(
+        top_w.reshape(G, T * k), mode="drop")
+
+    # ---- expert compute (EP: E sharded over `model`) ------------------------
+    xe = jnp.take_along_axis(xg, token_for_slot[..., None], axis=1)
+    xe = xe.reshape(G, E, C, M)
+    xe = constrain(xe, rules, None if decode else "batch", "expert", None, None)
+    h = jnp.einsum("gecm,emf->gecf", xe, params["wi"].astype(xe.dtype))
+    a = ACTS[cfg.mlp_act](h)
+    if "wg" in params:
+        a = a * jnp.einsum("gecm,emf->gecf", xe, params["wg"].astype(xe.dtype))
+    ye = jnp.einsum("gecf,efm->gecm", a, params["wo"].astype(xe.dtype))
+    ye = constrain(ye, rules, None if decode else "batch", "expert", None, None)
+
+    # ---- combine (scatter-add; dropped slots carry weight 0) ----------------
+    from repro.models.layers import _LOWP_COLLECTIVES
+    acc_dt = x.dtype if _LOWP_COLLECTIVES else jnp.float32
+    contrib = (w_for_slot[..., None].astype(acc_dt)
+               * ye.reshape(G, E * C, M).astype(acc_dt))
+    y = jnp.zeros((G, T, M), acc_dt).at[g_idx, token_for_slot].add(contrib)
+    y = y.astype(x.dtype).reshape(B, S, M)
+
+    # ---- always-on paths -----------------------------------------------------
+    if "shared" in params:
+        y = y + mlp(params["shared"], x, cfg.mlp_act, rules)
+    if "dense" in params:
+        y = y + mlp(params["dense"], x, cfg.mlp_act, rules)
+
+    # ---- aux losses ----------------------------------------------------------
+    frac_tokens = jnp.mean(oh.astype(jnp.float32), axis=(0, 1)) * k  # (E,)
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    lb = E * jnp.sum(frac_tokens * mean_prob) / k
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = {"moe_lb": lb, "moe_z": zl}
+    return constrain(y, rules, "batch", None, None), aux

@@ -1,0 +1,98 @@
+"""Griffin recurrent block with RG-LRU (recurrentgemma-9b).
+
+h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t),
+a_t = exp(-c · softplus(Λ) · r_t),  c = 8.
+
+The gated linear recurrence is diagonal → computed with
+``jax.lax.associative_scan`` (parallel prefix, TPU-friendly; state is only
+(B,S,d_rnn) so full materialization is cheap, unlike mamba's ×d_state).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, constrain, dense
+from repro.models.ssm import _causal_conv
+
+_C = 8.0
+
+
+def rglru_specs(cfg) -> dict[str, ParamSpec]:
+    M, dr = cfg.d_model, cfg.d_rnn
+    bw = cfg.rglru.block_width or dr
+    nb = dr // bw
+    pdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w_x": ParamSpec((M, dr), ("embed", "rnn"), pdt),
+        "w_y": ParamSpec((M, dr), ("embed", "rnn"), pdt),
+        "conv_w": ParamSpec((cfg.rglru.d_conv, dr), ("conv", "rnn"), pdt, scale=1.0),
+        "conv_b": ParamSpec((dr,), ("rnn",), pdt, init="zeros"),
+        # block-diagonal input/recurrence gates
+        "w_i": ParamSpec((nb, bw, bw), ("rnn", None, None), pdt),
+        "w_r": ParamSpec((nb, bw, bw), ("rnn", None, None), pdt),
+        "b_i": ParamSpec((dr,), ("rnn",), pdt, init="zeros"),
+        "b_r": ParamSpec((dr,), ("rnn",), pdt, init="zeros"),
+        "lam": ParamSpec((dr,), ("rnn",), jnp.float32, init="ones"),
+        "w_out": ParamSpec((dr, M), ("rnn", "embed"), pdt),
+    }
+
+
+def _block_diag(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B,S,dr); w: (nb,bw,bw) block-diagonal matmul."""
+    B, S, dr = x.shape
+    nb, bw, _ = w.shape
+    xb = x.reshape(B, S, nb, bw)
+    y = jnp.einsum("bsnw,nwv->bsnv", xb, w.astype(x.dtype))
+    return y.reshape(B, S, dr) + b.astype(x.dtype)
+
+
+def rglru_scan(a: jax.Array, b: jax.Array, h0: jax.Array):
+    """Diagonal linear recurrence h_t = a_t*h_{t-1} + b_t via associative scan.
+    a, b: (B,S,dr) fp32; h0: (B,dr). Returns (h_all (B,S,dr), h_last)."""
+    # fold h0 into the first element: b_0' = a_0*h0 + b_0
+    b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_block(params: dict, x: jax.Array, *, cfg, rules: dict,
+                cache: Optional[dict] = None, return_cache: bool = False):
+    """Griffin recurrent mixer. x: (B,S,M). Returns (y, new_cache)."""
+    B, S, M = x.shape
+    dr = cfg.d_rnn
+
+    y_branch = jax.nn.gelu(dense(x, params["w_y"]))
+    xb = dense(x, params["w_x"])
+    xb = constrain(xb, rules, "batch", None, "rnn")
+    conv_carry = cache["conv"] if cache is not None else None
+    xb, new_conv = _causal_conv(xb, params["conv_w"], params["conv_b"], conv_carry)
+
+    gate_i = jax.nn.sigmoid(_block_diag(xb, params["w_i"], params["b_i"]))
+    gate_r = jax.nn.sigmoid(_block_diag(xb, params["w_r"], params["b_r"]))
+    log_a = (-_C * jax.nn.softplus(params["lam"])) * gate_r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    # sqrt(1-a^2) computed in log space for stability near a→1
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated_x = beta * (gate_i.astype(jnp.float32) * xb.astype(jnp.float32))
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, dr), jnp.float32)
+    if S == 1 and cache is not None:
+        h_last = a[:, 0] * h0 + gated_x[:, 0]
+        h = h_last[:, None]
+    else:
+        h, h_last = rglru_scan(a, gated_x, h0)
+
+    merged = h.astype(x.dtype) * y_branch
+    out = dense(merged, params["w_out"])
+    new_cache = ({"conv": new_conv, "h": h_last}
+                 if (cache is not None or return_cache) else None)
+    return constrain(out, rules, "batch", None, None), new_cache

@@ -1,0 +1,131 @@
+"""Mamba-1 selective SSM block (falcon-mamba-7b).
+
+XLA path: two-level chunked scan — outer ``lax.scan`` over sequence chunks
+carrying the SSM state, inner per-step scan wrapped in ``jax.checkpoint`` so
+backward recomputes per-step states (memory: chunk-boundary states only).
+The Pallas twin (repro/kernels/ssm_scan) is the TPU hot-loop drop-in.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, constrain, dense
+
+
+def mamba_specs(cfg) -> dict[str, ParamSpec]:
+    s = cfg.ssm
+    M, di, N = cfg.d_model, cfg.d_inner, s.d_state
+    R = s.resolved_dt_rank(M)
+    pdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "in_proj": ParamSpec((M, 2 * di), ("embed", "inner"), pdt),
+        "conv_w": ParamSpec((s.d_conv, di), ("conv", "inner"), pdt, scale=1.0),
+        "conv_b": ParamSpec((di,), ("inner",), pdt, init="zeros"),
+        "x_proj": ParamSpec((di, R + 2 * N), ("inner", "dt"), pdt),
+        "dt_proj": ParamSpec((R, di), ("dt", "inner"), pdt),
+        "dt_bias": ParamSpec((di,), ("inner",), pdt, init="zeros"),
+        "A_log": ParamSpec((di, N), ("inner", "state"), jnp.float32, init="a_log"),
+        "D": ParamSpec((di,), ("inner",), jnp.float32, init="ones"),
+        "out_proj": ParamSpec((di, M), ("inner", "embed"), pdt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 carry: Optional[jax.Array]) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along seq. x: (B,S,di); w: (K,di).
+    carry: (B,K-1,di) previous inputs (decode) or None (zeros).
+    Returns (y, new_carry)."""
+    B, S, di = x.shape
+    K = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((B, K - 1, di), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)          # (B, S+K-1, di)
+    y = sum(xp[:, j:j + S] * w[j].astype(x.dtype) for j in range(K))
+    new_carry = xp[:, -(K - 1):] if K > 1 else carry
+    return y + b.astype(x.dtype), new_carry
+
+
+def selective_scan(xi, dt, Bm, Cm, A, h0, *, chunk: int = 64):
+    """h_t = exp(dt_t·A)⊙h_{t-1} + (dt_t·x_t)·B_t ;  y_t = h_t·C_t.
+
+    xi, dt: (B,S,di); Bm, Cm: (B,S,N); A: (di,N) negative; h0: (B,di,N) fp32.
+    Returns (y (B,S,di), h_last).
+    """
+    B, S, di = xi.shape
+    N = A.shape[1]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        xi = jnp.pad(xi, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 -> identity step
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // c
+
+    def to_chunks(x):  # (B,Sp,F) -> (nc, c, B, F)
+        return jnp.moveaxis(x.reshape(B, nc, c, -1), (1, 2), (0, 1))
+
+    xs = jax.tree.map(to_chunks, (xi, dt, Bm, Cm))
+
+    @jax.checkpoint
+    def chunk_fn(h, chunk_in):
+        def step(h, t):
+            xi_t, dt_t, B_t, C_t = t                  # (B,di) (B,di) (B,N) (B,N)
+            dt32 = dt_t.astype(jnp.float32)
+            decay = jnp.exp(dt32[:, :, None] * A)     # (B,di,N)
+            inp = (dt32 * xi_t.astype(jnp.float32))[:, :, None] * \
+                B_t.astype(jnp.float32)[:, None, :]
+            h = decay * h + inp
+            y = jnp.einsum("bdn,bn->bd", h, C_t.astype(jnp.float32))
+            return h, y.astype(xi.dtype)
+
+        xi_c, dt_c, B_c, C_c = chunk_in               # each (c, B, F)
+        h, ys = jax.lax.scan(step, h, (xi_c, dt_c, B_c, C_c))
+        return h, ys
+
+    h, ys = jax.lax.scan(chunk_fn, h0, xs)            # ys: (nc, c, B, di)
+    y = jnp.moveaxis(ys.reshape(nc * c, B, di), 0, 1)[:, :S]
+    return y, h
+
+
+def mamba_block(params: dict, x: jax.Array, *, cfg, rules: dict,
+                cache: Optional[dict] = None, return_cache: bool = False):
+    """x: (B,S,M). Returns (y, new_cache)."""
+    B, S, M = x.shape
+    s = cfg.ssm
+    di, N = cfg.d_inner, s.d_state
+    R = s.resolved_dt_rank(M)
+
+    xz = dense(x, params["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, rules, "batch", None, "inner")
+    conv_carry = cache["conv"] if cache is not None else None
+    xi, new_conv = _causal_conv(xi, params["conv_w"], params["conv_b"], conv_carry)
+    xi = jax.nn.silu(xi)
+
+    bcdt = dense(xi, params["x_proj"])
+    dt_r, Bm, Cm = jnp.split(bcdt, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dense(dt_r, params["dt_proj"]) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])                     # (di,N), negative
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, di, N), jnp.float32)
+    if S == 1 and cache is not None:                  # decode fast path
+        dt32 = dt[:, 0].astype(jnp.float32)
+        decay = jnp.exp(dt32[:, :, None] * A)
+        inp = (dt32 * xi[:, 0].astype(jnp.float32))[:, :, None] * \
+            Bm[:, 0].astype(jnp.float32)[:, None, :]
+        h = decay * h0 + inp
+        y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))[:, None]
+        y = y.astype(x.dtype)
+    else:
+        y, h = selective_scan(xi, dt, Bm, Cm, A, h0, chunk=max(cfg.attn_chunk // 16, 16))
+
+    y = y + params["D"].astype(x.dtype) * xi
+    y = y * jax.nn.silu(z)
+    out = dense(y, params["out_proj"])
+    new_cache = {"conv": new_conv, "h": h} if (cache is not None or return_cache) else None
+    return constrain(out, rules, "batch", None, None), new_cache

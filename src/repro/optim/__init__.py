@@ -1,0 +1,2 @@
+from repro.optim.optimizer import AdamWConfig, make_optimizer  # noqa: F401
+from repro.optim.schedule import constant, warmup_cosine  # noqa: F401

@@ -1,0 +1,140 @@
+"""AdamW with global-norm clipping and optional ZeRO-1 state sharding.
+
+ZeRO-1 (zero1=True): first- and second-moment tensors get an *additional*
+sharding constraint over the DP axes on their largest divisible,
+not-yet-sharded dimension. Under pjit this turns the gradient all-reduce
+into reduce-scatter + (post-update) all-gather — same wire bytes, 1/dp the
+optimizer-state memory per device (visible in the dry-run memory analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, is_spec, param_logical_axes
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    zero1: bool = True
+
+
+def _zero1_axes(axes: tuple, shape: tuple, dp: tuple[str, ...],
+                dp_size: int) -> tuple:
+    """Pick the largest divisible unsharded dim for the extra DP shard."""
+    best, best_size = None, 0
+    for i, (a, n) in enumerate(zip(axes, shape)):
+        if a in (None, "layers") or a is None:
+            if n % dp_size == 0 and n > best_size:
+                best, best_size = i, n
+    if best is None:
+        return axes
+    new = list(axes)
+    new[best] = "__zero1__"
+    return tuple(new)
+
+
+def make_optimizer(spec_tree: PyTree, cfg: AdamWConfig, mesh=None,
+                   rules: Optional[dict] = None):
+    """Returns (init_fn(params)->state, update_fn(grads, state, params, lr)
+    -> (new_params, new_state, stats))."""
+    axes_tree = param_logical_axes(spec_tree)
+    dp = tuple(a for a in ("pod", "data") if mesh is not None
+               and a in mesh.axis_names)
+    dp_size = 1
+    if mesh is not None:
+        for a in dp:
+            dp_size *= mesh.shape[a]
+    use_zero1 = cfg.zero1 and mesh is not None and dp_size > 1 and rules
+
+    def moment_constraint(m, axes, shape):
+        if not use_zero1:
+            return m
+        zaxes = _zero1_axes(axes, shape, dp, dp_size)
+        r = dict(rules, __zero1__=(dp if len(dp) > 1 else dp[0]))
+        spec = jax.sharding.PartitionSpec(
+            *[r.get(a) if a else None for a in zaxes])
+        try:
+            return jax.lax.with_sharding_constraint(m, spec)
+        except (ValueError, RuntimeError):
+            return m
+
+    def init_fn(params: PyTree) -> dict:
+        def zeros_like_sharded(p, axes):
+            return moment_constraint(jnp.zeros_like(p), axes, p.shape)
+        mu = jax.tree.map(zeros_like_sharded, params, axes_tree)
+        nu = jax.tree.map(zeros_like_sharded, params, axes_tree)
+        return {"mu": mu, "nu": nu, "count": jnp.zeros((), jnp.int32)}
+
+    def update_fn(grads: PyTree, state: dict, params: PyTree, lr):
+        count = state["count"] + 1
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+        def upd(g, m, v, p, axes):
+            g = g.astype(jnp.float32) * scale
+            # ZeRO: pin grads to the moment layout -> XLA reduce-scatters
+            # the DP gradient reduction instead of all-reducing, and the
+            # f32 grad buffer is 1/dp per device
+            g = moment_constraint(g, axes, p.shape)
+            m = cfg.b1 * m + (1 - cfg.b1) * g
+            v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+            m = moment_constraint(m, axes, p.shape)
+            v = moment_constraint(v, axes, p.shape)
+            mhat = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+            vhat = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+            step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            decay = cfg.weight_decay * p.astype(jnp.float32) \
+                if p.ndim > 1 else 0.0
+            new_p = p.astype(jnp.float32) - lr * (step + decay)
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["mu"], state["nu"], params,
+                           axes_tree)
+        leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x:
+                                           isinstance(x, tuple) and
+                                           len(x) == 3)
+        new_p = jax.tree.unflatten(treedef, [l[0] for l in leaves])
+        new_mu = jax.tree.unflatten(treedef, [l[1] for l in leaves])
+        new_nu = jax.tree.unflatten(treedef, [l[2] for l in leaves])
+        new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+        return new_p, new_state, {"grad_norm": gnorm, "clip_scale": scale}
+
+    return init_fn, update_fn
+
+
+def opt_state_specs(spec_tree: PyTree, cfg: AdamWConfig, mesh=None,
+                    rules: Optional[dict] = None) -> PyTree:
+    """ParamSpec tree for the optimizer state (for dry-run / checkpointing
+    shardings), mirroring init_fn's (possibly ZeRO-1) layout."""
+    dp = tuple(a for a in ("pod", "data") if mesh is not None
+               and a in mesh.axis_names)
+    dp_size = 1
+    if mesh is not None:
+        for a in dp:
+            dp_size *= mesh.shape[a]
+    use_zero1 = cfg.zero1 and dp_size > 1
+
+    def momspec(s: ParamSpec) -> ParamSpec:
+        axes = s.logical_axes
+        if use_zero1:
+            axes = _zero1_axes(axes, s.shape, dp, dp_size)
+        return ParamSpec(s.shape, axes, jnp.float32, init="zeros")
+
+    mu = jax.tree.map(momspec, spec_tree, is_leaf=is_spec)
+    nu = jax.tree.map(momspec, spec_tree, is_leaf=is_spec)
+    return {"mu": mu, "nu": nu,
+            "count": ParamSpec((), (), jnp.int32, init="zeros")}

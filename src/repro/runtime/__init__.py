@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    InjectedFailure, Supervisor, SupervisorConfig, plan_mesh,
+)

@@ -1,0 +1,3 @@
+from repro.train.sharding import make_rules  # noqa: F401
+from repro.train.train_step import TrainConfig, TrainSetup  # noqa: F401
+from repro.train.serve_step import ServeSetup  # noqa: F401

@@ -1,0 +1,69 @@
+"""Serving steps: prefill (builds the KV/state cache) and decode (one token
+against a seq_len cache) — what the inference dry-run shapes lower.
+
+long-context decode uses seq-sharded global KV caches (seq_shard_kv=True):
+batch=1 cannot use DP, so the `data` axis shards the cache sequence dim and
+GSPMD turns the softmax reductions into the SP all-reduces (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import abstract_params, param_shardings
+from repro.models.model import Model
+from repro.train.sharding import batch_shardings, make_rules
+
+
+class ServeSetup:
+    def __init__(self, model: Model, mesh, *, seq_shard_kv: bool = False,
+                 global_batch: int = 0):
+        self.model = model
+        self.mesh = mesh
+        self.rules = make_rules(mesh, model.cfg, seq_shard_kv=seq_shard_kv,
+                                global_batch=global_batch)
+
+    def param_shardings(self):
+        return param_shardings(self.model.param_specs(), self.mesh,
+                               self.rules)
+
+    def cache_shardings(self, B: int, T: int):
+        return param_shardings(self.model.cache_specs(B, T), self.mesh,
+                               self.rules)
+
+    def abstract_cache(self, B: int, T: int):
+        return self.model.abstract_cache(B, T)
+
+    # -- steps -------------------------------------------------------------
+    def prefill_fn(self, max_len: int = 0) -> Callable:
+        def prefill(params, batch: dict):
+            logits, cache = self.model.prefill(
+                params, batch["tokens"], self.rules,
+                prefix_embed=batch.get("prefix_embed"), max_len=max_len)
+            return logits, cache
+        return prefill
+
+    def decode_fn(self) -> Callable:
+        def decode(params, cache, batch: dict):
+            logits, new_cache = self.model.decode_step(
+                params, batch["tokens"], batch["pos"], cache, self.rules)
+            return logits, new_cache
+        return decode
+
+    def jitted_prefill(self, B: int, S: int, max_len: int = 0):
+        ps = self.param_shardings()
+        cs = self.cache_shardings(B, max_len or S)
+        from repro.configs import input_specs  # noqa: F401 (callers use it)
+        return jax.jit(self.prefill_fn(max_len),
+                       in_shardings=(ps, None),
+                       out_shardings=(None, cs))
+
+    def jitted_decode(self, B: int, T: int):
+        ps = self.param_shardings()
+        cs = self.cache_shardings(B, T)
+        return jax.jit(self.decode_fn(),
+                       in_shardings=(ps, cs, None),
+                       out_shardings=(None, cs),
+                       donate_argnums=(1,))

@@ -1,0 +1,84 @@
+"""Logical-axis -> mesh-axis sharding rules (DESIGN.md §4).
+
+DP over (pod, data); TP/EP over model; SP (sequence-sharded KV cache) over
+data for long-context decode. Rules are arch-aware: axes whose size does
+not divide the mesh axis are replicated when padding would be degenerate
+(e.g. MQA kv_heads=1), otherwise GSPMD pads (recorded in the roofline
+useful-FLOPs ratio; a §Perf lever).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def make_rules(mesh, cfg=None, *, seq_shard_kv: bool = False,
+               global_batch: int = 0) -> dict[str, Any]:
+    model_n = mesh.shape.get("model", 1)
+    dp = dp_axes(mesh)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh.shape[a]
+    if global_batch and global_batch % dp_total:
+        dp_rule: Any = None   # batch=1 long-context decode: replicate batch,
+                              # parallelism comes from SP (kv_seq) + model
+    else:
+        dp_rule = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def maybe_model(size: Optional[int], min_per_shard: int = 1):
+        """Shard over model only when evenly divisible (pjit argument
+        shardings require it); else replicate."""
+        if size is None or (size % model_n == 0
+                            and size >= model_n * min_per_shard):
+            return "model"
+        return None
+
+    kv = cfg.n_kv_heads if cfg is not None else None
+    return {
+        "batch": dp_rule,
+        "vocab": "model",
+        "embed": None,
+        # attention projections are stored flattened (H*D divisible by 16
+        # for every assigned arch) -> TP always shards them
+        "qkv": "model",
+        "kv_flat": "model",
+        # per-head axes appear only on caches/activations: shard when a
+        # whole head fits per shard (MQA caches replicate — tiny anyway)
+        "heads": maybe_model(cfg.n_heads if cfg is not None else None),
+        "heads_padded": maybe_model(
+            max(cfg.pad_heads_to, cfg.n_heads) if cfg is not None else None),
+        "kv_heads": maybe_model(kv),
+        "head_dim": None,
+        "ffn": "model",
+        "expert": "model",
+        "expert_ffn": None,
+        "capacity": None,
+        "inner": "model",
+        "rnn": "model",
+        "state": None,
+        "conv": None,
+        "dt": None,
+        "layers": None,
+        # decode-time KV cache sequence axis: sharded over `data` for
+        # long-context (SP decode; batch=1 cannot use DP), else replicated
+        "kv_seq": "data" if seq_shard_kv else None,
+    }
+
+
+def batch_shardings(mesh, rules, batch: dict) -> dict:
+    dp = rules["batch"]
+    out = {}
+    for k, v in batch.items():
+        spec = [dp] + [None] * (v.ndim - 1)
+        out[k] = jax.sharding.NamedSharding(mesh, P(*spec))
+    return out
+
+
+def replicated(mesh):
+    return jax.sharding.NamedSharding(mesh, P())

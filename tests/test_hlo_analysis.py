@@ -1,0 +1,93 @@
+"""The roofline numbers all flow through launch/hlo_analysis — pin its
+semantics against closed-form probes (XLA cost_analysis counts loop bodies
+once; the analyzer must not)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze, parse_hlo, multiplicities
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_trip_count_multiplies_flops():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    r = analyze(_hlo(f, jax.ShapeDtypeStruct((128, 128), jnp.float32)))
+    assert r["flops"] == pytest.approx(10 * 2 * 128 ** 3, rel=1e-3)
+
+
+def test_nested_scan_trip_counts_compose():
+    def g(x):
+        def inner(c, _):
+            return c @ c, None
+
+        def outer(c, _):
+            return jax.lax.scan(inner, c, None, length=4)[0], None
+
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    r = analyze(_hlo(g, jax.ShapeDtypeStruct((64, 64), jnp.float32)))
+    assert r["flops"] == pytest.approx(20 * 2 * 64 ** 3, rel=1e-3)
+
+
+def test_raw_cost_analysis_undercounts_loops():
+    """Documents WHY the analyzer exists."""
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        return jax.lax.scan(body, x, None, length=10)[0]
+
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    raw = lowered.compile().cost_analysis()["flops"]
+    assert raw < 2 * 2 * 128 ** 3  # counts the body once
+
+
+def test_dot_flops_batched_and_contracting_dims():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+
+    r = analyze(_hlo(f, jax.ShapeDtypeStruct((4, 32, 64), jnp.float32),
+                     jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)))
+    assert r["flops"] == pytest.approx(2 * 4 * 32 * 64 * 16, rel=1e-3)
+
+
+def test_vpu_elementwise_counted_with_multiplicity():
+    def f(x):
+        def body(c, _):
+            return jnp.exp(c) * 2.0 + 1.0, None
+        return jax.lax.scan(body, x, None, length=7)[0]
+
+    r = analyze(_hlo(f, jax.ShapeDtypeStruct((256, 128), jnp.float32)))
+    # 3 elementwise ops (exp, mul, add) x 7 trips x 256*128 elems
+    expect = 3 * 7 * 256 * 128
+    assert r["vpu_flops"] == pytest.approx(expect, rel=0.35)  # fusion slack
+
+
+def test_multiplicity_parsing_structure():
+    def f(x):
+        def body(c, _):
+            return c * 2.0, None
+        return jax.lax.scan(body, x, None, length=9)[0]
+
+    text = _hlo(f, jax.ShapeDtypeStruct((64, 64), jnp.float32))
+    comps = parse_hlo(text)
+    mult = multiplicities(comps)
+    assert len(comps) >= 2              # entry + loop body at minimum
+    assert max(mult.values()) >= 9.0    # the body runs 9x
+
+
+def test_collectives_empty_on_single_device():
+    def f(a, b):
+        return a @ b
+
+    r = analyze(_hlo(f, jax.ShapeDtypeStruct((64, 64), jnp.float32),
+                     jax.ShapeDtypeStruct((64, 64), jnp.float32)))
+    assert r["collective_total"] == 0.0
+    assert r["hbm_bytes"] >= 3 * 64 * 64 * 4  # operands + result at least

@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# ---------------------------------------------------------------------------
+# staging_pack
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shape,tile", [
+    ((256, 128), (256, 128)),
+    ((512, 256), (256, 128)),
+    ((64, 384), (8, 128)),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("out_dtype", [None, jnp.int8, jnp.bfloat16])
+def test_staging_pack_vs_ref(shape, tile, dtype, out_dtype):
+    from repro.kernels.staging_pack import kernel, ref
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, dtype)
+    bp, sp = kernel.pack_blocks(x, tile=tile, out_dtype=out_dtype,
+                                interpret=True)
+    br, sr = ref.pack_blocks_ref(x, tile=tile, out_dtype=out_dtype)
+    assert bp.dtype == br.dtype and bp.shape == br.shape
+    if out_dtype == jnp.int8:
+        # amax reduction order may differ by 1 ulp -> round-half ties can
+        # flip by one quantization step
+        diff = np.abs(np.asarray(bp, np.int32) - np.asarray(br, np.int32))
+        assert diff.max() <= 1 and (diff != 0).mean() < 1e-3
+    else:
+        np.testing.assert_array_equal(np.asarray(bp), np.asarray(br))
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sr), rtol=1e-6)
+
+
+def test_pack_roundtrip_lossless_and_quantized():
+    from repro.kernels.staging_pack import ops
+    y = jax.random.normal(jax.random.PRNGKey(1), (3, 1000, 7), jnp.float32)
+    b, s = ops.pack(y, block_bytes=64 << 10, impl="xla")
+    assert bool(jnp.array_equal(ops.unpack(b, s, y.shape), y))
+    bq, sq = ops.pack(y, block_bytes=64 << 10, out_dtype=jnp.int8,
+                      impl="pallas", interpret=True)
+    yr = ops.unpack(bq, sq, y.shape)
+    rel = float(jnp.max(jnp.abs(yr - y)) / jnp.max(jnp.abs(y)))
+    assert rel < 1e-2
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [
+    dict(B=2, S=256, Hq=4, Hkv=2, D=64, window=0, cap=0.0, causal=True),
+    dict(B=1, S=512, Hq=8, Hkv=1, D=128, window=0, cap=50.0, causal=True),
+    dict(B=2, S=256, Hq=4, Hkv=4, D=64, window=128, cap=0.0, causal=True),
+    dict(B=1, S=256, Hq=2, Hkv=2, D=64, window=0, cap=0.0, causal=False),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(cfg, dtype):
+    from repro.kernels.flash_attention import ops
+    B, S, Hq, Hkv, D = cfg["B"], cfg["S"], cfg["Hq"], cfg["Hkv"], cfg["D"]
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), dtype)
+    kw = dict(softcap=cfg["cap"], causal=cfg["causal"], window=cfg["window"])
+    o_ref = ops.gqa_attention_ref(q, k, v, **kw)
+    o_pl = ops.gqa_attention(q, k, v, impl="pallas", block_q=128,
+                             block_k=128, interpret=True, **kw)
+    o_xla = ops.gqa_attention(q, k, v, impl="xla", block_q=128, block_k=128,
+                              **kw)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o_pl, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(o_xla, np.float32),
+                               np.asarray(o_ref, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,di,N,chunk,dtile", [
+    (2, 64, 256, 16, 16, 128),
+    (1, 100, 300, 8, 32, 128),     # padding paths
+    (2, 128, 512, 16, 64, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_vs_ref(B, S, di, N, chunk, dtile, dtype):
+    from repro.kernels.ssm_scan import ops, ref
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    xi = jax.random.normal(ks[0], (B, S, di), dtype)
+    dt = (jax.nn.softplus(jax.random.normal(ks[1], (B, S, di))) * 0.1).astype(dtype)
+    Bm = jax.random.normal(ks[2], (B, S, N), dtype)
+    Cm = jax.random.normal(ks[3], (B, S, N), dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (di, N)) * 0.2)
+    h0 = jax.random.normal(ks[5], (B, di, N), jnp.float32)
+    y0, h_ref = ref.ssm_scan_ref(xi, dt, Bm, Cm, A, h0)
+    yp, hp = ops.selective_scan(xi, dt, Bm, Cm, A, h0, chunk=chunk,
+                                d_tile=dtile, impl="pallas", interpret=True)
+    yx, hx = ops.selective_scan(xi, dt, Bm, Cm, A, h0, chunk=chunk,
+                                impl="xla")
+    tol = 5e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(yp, np.float32),
+                               np.asarray(y0, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(hp), np.asarray(h_ref), atol=tol)
+    np.testing.assert_allclose(np.asarray(yx, np.float32),
+                               np.asarray(y0, np.float32), atol=tol)

@@ -1,0 +1,136 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocks import TransferCostModel, plan_blocks, vmem_tile
+from repro.core.intransit import dequantize_int8_np, quantize_int8_np
+from repro.core.tars import TAR, Attribute, Dimension
+
+settings.register_profile("ci", max_examples=50, deadline=None)
+settings.load_profile("ci")
+
+
+# ---------------------------------------------------------------------------
+# block planner
+# ---------------------------------------------------------------------------
+
+
+@given(nbytes=st.integers(0, 1 << 24), block=st.integers(1, 1 << 22))
+def test_plan_blocks_covers_exactly(nbytes, block):
+    plan = plan_blocks(nbytes, block)
+    assert sum(sz for _, sz in plan) == nbytes
+    # contiguous, disjoint, ordered (FCFS over offsets)
+    pos = 0
+    for off, sz in plan:
+        assert off == pos and sz > 0
+        pos += sz
+    if nbytes:
+        assert max(sz for _, sz in plan) <= block
+
+
+@given(nbytes=st.integers(1, 1 << 30),
+       b1=st.sampled_from([1 << 21, 1 << 23, 1 << 25]),
+       b2=st.sampled_from([1 << 26, 1 << 27, 1 << 28]))
+def test_cost_model_monotone_in_block_size(nbytes, b1, b2):
+    """Paper claim C1: larger blocks never slower (per-block costs amortize)."""
+    m = TransferCostModel()
+    assert m.predict(nbytes, b2) <= m.predict(nbytes, b1) + 1e-12
+
+
+@given(elems=st.integers(128, 1 << 22),
+       itemsize=st.sampled_from([1, 2, 4]))
+def test_vmem_tile_alignment(elems, itemsize):
+    rows, lanes = vmem_tile(elems, itemsize)
+    assert lanes == 128
+    assert rows % max(32 // itemsize, 1) == 0      # sublane packing
+    assert rows * lanes <= max(elems, rows * lanes)  # never zero-sized
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(1, 5000), st.integers(0, 2 ** 32 - 1))
+def test_int8_quant_error_bound(n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32) * rng.uniform(0.01, 100)
+    block = 256
+    q, s = quantize_int8_np(x, block)
+    back = dequantize_int8_np(q, s, x.shape, block)
+    # per-block error bound: scale/2 = amax/254
+    pad = (-n) % block
+    xp = np.pad(x, (0, pad)).reshape(-1, block)
+    bound = np.abs(xp).max(axis=1) / 127.0
+    err = np.abs(np.pad(x, (0, pad)).reshape(-1, block)
+                 - np.pad(back, (0, pad)).reshape(-1, block))
+    assert (err <= bound[:, None] / 2 + 1e-7).all()
+
+
+@given(st.integers(1, 2000))
+def test_quant_zero_block_is_exact(n):
+    x = np.zeros(n, np.float32)
+    q, s = quantize_int8_np(x, 128)
+    assert (dequantize_int8_np(q, s, x.shape, 128) == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# TARS
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def tar_and_boxes(draw):
+    nd = draw(st.integers(1, 3))
+    dims = [draw(st.integers(2, 12)) for _ in range(nd)]
+    n_sub = draw(st.integers(1, 4))
+    subs = []
+    for _ in range(n_sub):
+        origin = tuple(draw(st.integers(0, d - 1)) for d in dims)
+        shape = tuple(draw(st.integers(1, d - o)) for d, o in zip(dims, origin))
+        subs.append((origin, shape))
+    qlo = tuple(draw(st.integers(0, d - 1)) for d in dims)
+    qhi = tuple(draw(st.integers(l, d - 1)) for d, l in zip(dims, qlo))
+    return dims, subs, qlo, qhi
+
+
+@given(tar_and_boxes(), st.integers(0, 2 ** 31 - 1))
+def test_tars_select_matches_numpy(data, seed):
+    """select() over overlapping subtars == last-write-wins dense array."""
+    dims, subs, qlo, qhi = data
+    rng = np.random.default_rng(seed)
+    t = TAR("t", [Dimension(f"d{i}", 0, n - 1) for i, n in enumerate(dims)],
+            [Attribute("v", "float64")])
+    dense = np.zeros(dims)
+    for origin, shape in subs:
+        data_arr = rng.standard_normal(shape)
+        t.load_subtar(origin, shape, {"v": data_arr})
+        sl = tuple(slice(o, o + s) for o, s in zip(origin, shape))
+        dense[sl] = data_arr
+    sel = t.select("v", qlo, qhi)
+    qsl = tuple(slice(l, h + 1) for l, h in zip(qlo, qhi))
+    assert np.array_equal(sel, dense[qsl])
+    # aggregates consistent with select
+    assert np.isclose(t.aggregate("v", "sum", qlo, qhi), dense[qsl].sum())
+
+
+@given(st.integers(1, 50), st.integers(2, 40))
+def test_dimension_mapping_roundtrip(i, stride):
+    d = Dimension("x", 0, 100, offset=3.5, stride=float(stride))
+    assert d.to_index(float(d.to_coord(i))) == i
+
+
+# ---------------------------------------------------------------------------
+# FCFS queue ordering
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=30))
+def test_fcfs_single_thread_preserves_order(items):
+    from repro.core.queues import FCFSPool
+    out = []
+    pool = FCFSPool(1, "t")
+    hs = [pool.submit(out.append, i, name=str(i)) for i in items]
+    pool.sync(10)
+    pool.stop()
+    assert out == items
