@@ -1,4 +1,9 @@
-"""Shared benchmark utilities: trials with 95% CI, servers, CSV."""
+"""Shared benchmark utilities: trials with 95% CI, servers, sessions, CSV.
+
+All benchmarks go through the transport registry
+(:mod:`repro.transport`): an engine is only ever named by its registry
+string, so new backends show up in the sweeps without touching callers.
+"""
 from __future__ import annotations
 
 import math
@@ -10,6 +15,7 @@ import numpy as np
 
 from repro.core.savime import SavimeServer
 from repro.core.staging import StagingServer
+from repro.transport import TransferSession, TransportConfig
 
 
 def ci95(xs: list[float]) -> tuple[float, float]:
@@ -31,6 +37,25 @@ def fresh_stack(mem_capacity: int = 4 << 30, send_threads: int = 2):
     finally:
         st.stop()
         sv.stop()
+
+
+def staged_sessions(staging_addr: str, n_clients: int = 1, *,
+                    io_threads: int = 1, block_size: int = 64 << 20,
+                    **kw) -> list[TransferSession]:
+    """Open ``n_clients`` independent rdma_staged sessions against one
+    staging server (the paper's multiple compute nodes)."""
+    cfg = TransportConfig(staging_addr=staging_addr, io_threads=io_threads,
+                          block_size=block_size, **kw)
+    return [TransferSession("rdma_staged", cfg).open()
+            for _ in range(n_clients)]
+
+
+def engine_cfg(savime_addr: str, *, io_threads: int = 2,
+               block_size: int = 16 << 20, **kw) -> TransportConfig:
+    """Config for a self-contained engine run against a SAVIME endpoint
+    (rdma_staged owns its staging server in this mode)."""
+    return TransportConfig(savime_addr=savime_addr, io_threads=io_threads,
+                           block_size=block_size, **kw)
 
 
 def make_buffers(n_files: int, file_bytes: int, seed: int = 0):

@@ -1,12 +1,13 @@
 """Fig 3 repro: elapsed time to staging vs RDMA block size, 1 I/O thread per
 client. Paper claim C1: monotone improvement with block size (per-block
-registration + control RTT amortize)."""
+registration + control RTT amortize). Clients are TransferSessions on the
+``rdma_staged`` transport."""
 from __future__ import annotations
 
 import time
 
-from repro.core.client import Dataset, StagingClient
-from benchmarks.common import ci95, csv_row, fresh_stack, make_buffers
+from benchmarks.common import (ci95, csv_row, fresh_stack, make_buffers,
+                               staged_sessions)
 
 
 def run(n_clients=3, n_files=8, file_mb=4, trials=5, io_threads=1,
@@ -18,19 +19,19 @@ def run(n_clients=3, n_files=8, file_mb=4, trials=5, io_threads=1,
         times = []
         for t in range(trials):
             with fresh_stack() as (sv, st):
-                clients = [StagingClient(st.addr, io_threads=io_threads,
-                                         block_size=bk << 10)
-                           for _ in range(n_clients)]
+                sessions = staged_sessions(st.addr, n_clients,
+                                           io_threads=io_threads,
+                                           block_size=bk << 10)
                 t0 = time.perf_counter()
-                for i, cli in enumerate(clients):
+                for i, sess in enumerate(sessions):
                     for j in range(n_files):
-                        Dataset(f"t{t}c{i}f{j}", "float64", cli).write(
-                            bufs[i * n_files + j])
-                for cli in clients:
-                    cli.sync()
+                        sess.write(f"t{t}c{i}f{j}", bufs[i * n_files + j],
+                                   dtype="float64")
+                for sess in sessions:
+                    sess.sync()
                 times.append(time.perf_counter() - t0)
-                for cli in clients:
-                    cli.close()
+                for sess in sessions:
+                    sess.close()
         m, ci = ci95(times)
         results[bk] = (m, ci)
         if not quiet:

@@ -1,5 +1,8 @@
 """Fig 4 repro: same sweep with 4 I/O threads per client. Paper claim C2:
-faster but less stable (wider CI); large blocks damp the instability."""
+faster but less stable (wider CI); large blocks damp the instability.
+
+Rides on fig3's TransferSession sweep — ``io_threads`` maps onto
+``TransportConfig.io_threads`` of the ``rdma_staged`` transport."""
 from __future__ import annotations
 
 from benchmarks.common import csv_row

@@ -1,13 +1,14 @@
 """Fig 5 repro: elapsed time vs dataset size, fixed block size, 1 thread.
-Paper claim C3: linear scaling."""
+Paper claim C3: linear scaling. Uses a TransferSession on the
+``rdma_staged`` transport."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core.client import Dataset, StagingClient
-from benchmarks.common import ci95, csv_row, fresh_stack, make_buffers
+from benchmarks.common import (ci95, csv_row, fresh_stack, make_buffers,
+                               staged_sessions)
 
 
 def run(sizes_mb=(16, 32, 64, 128), block_kb=16384, trials=4, quiet=False):
@@ -18,14 +19,14 @@ def run(sizes_mb=(16, 32, 64, 128), block_kb=16384, trials=4, quiet=False):
         times = []
         for t in range(trials):
             with fresh_stack() as (sv, st):
-                cli = StagingClient(st.addr, io_threads=1,
-                                    block_size=block_kb << 10)
+                (sess,) = staged_sessions(st.addr, 1, io_threads=1,
+                                          block_size=block_kb << 10)
                 t0 = time.perf_counter()
                 for j, b in enumerate(bufs):
-                    Dataset(f"s{mb}t{t}f{j}", "float64", cli).write(b)
-                cli.sync()
+                    sess.write(f"s{mb}t{t}f{j}", b, dtype="float64")
+                sess.sync()
                 times.append(time.perf_counter() - t0)
-                cli.close()
+                sess.close()
         m, ci = ci95(times)
         points.append((mb, m, ci))
         if not quiet:

@@ -4,50 +4,49 @@ Paper: scp->tmpfs ~4x slower, scp->disk ~18x slower, ssh-direct ~5x slower
 than the RDMA staged path. Our container's disk is NVMe-class; scp_disk is
 reported twice: honest (native) and throttled to the paper's 2018
 disk-array class (120 MB/s), clearly labelled.
+
+Every engine is named only by its transport-registry string and driven
+through one TransferSession (``repro.transport.run_engine``).
 """
 from __future__ import annotations
 
 from repro.core.savime import SavimeServer
-from repro.core.transfer import run_rdma_staged, run_scp, run_ssh_direct
-from benchmarks.common import ci95, csv_row, make_buffers
+from repro.transport import run_engine
+from benchmarks.common import ci95, csv_row, engine_cfg, make_buffers
 
 PAPER_DISK_BW = 120e6  # B/s — 2018 spinning-disk array class
+
+# label -> (registry name, extra TransportConfig kwargs)
+ENGINE_MATRIX = {
+    "rdma_staged": ("rdma_staged", {}),
+    "scp_mem": ("scp_mem", {}),
+    "scp_disk": ("scp_disk", {}),
+    "scp_disk_paperbw": ("scp_disk", {"disk_bw": PAPER_DISK_BW}),
+    "ssh_direct": ("ssh_direct", {}),
+}
 
 
 def run(n_files=12, file_mb=4, trials=3, io_threads=2, quiet=False):
     bufs = make_buffers(n_files, file_mb << 20)
     names = [f"f{i}" for i in range(n_files)]
-    engines = {
-        "rdma_staged": lambda sv, tag: run_rdma_staged(
-            bufs, [f"{tag}{n}" for n in names], savime_addr=sv.addr,
-            block_size=16 << 20, io_threads=io_threads),
-        "scp_mem": lambda sv, tag: run_scp(
-            bufs, [f"{tag}{n}" for n in names], savime_addr=sv.addr,
-            storage="mem", io_threads=io_threads),
-        "scp_disk": lambda sv, tag: run_scp(
-            bufs, [f"{tag}{n}" for n in names], savime_addr=sv.addr,
-            storage="disk", io_threads=io_threads),
-        "scp_disk_paperbw": lambda sv, tag: run_scp(
-            bufs, [f"{tag}{n}" for n in names], savime_addr=sv.addr,
-            storage="disk", io_threads=io_threads, disk_bw=PAPER_DISK_BW),
-        "ssh_direct": lambda sv, tag: run_ssh_direct(
-            bufs, [f"{tag}{n}" for n in names], savime_addr=sv.addr,
-            io_threads=io_threads),
-    }
     out = {}
-    for name, fn in engines.items():
+    for label, (engine, extra) in ENGINE_MATRIX.items():
         times = []
         for t in range(trials):
             sv = SavimeServer().start()
             try:
-                times.append(fn(sv, f"{name}_{t}_").to_staging_s)
+                cfg = engine_cfg(sv.addr, io_threads=io_threads, **extra)
+                stats = run_engine(engine, bufs,
+                                   [f"{label}_{t}_{n}" for n in names],
+                                   cfg, label=label)
+                times.append(stats.to_staging_s)
             finally:
                 sv.stop()
-        out[name] = ci95(times)
+        out[label] = ci95(times)
     base = out["rdma_staged"][0]
-    for name, (m, ci) in out.items():
+    for label, (m, ci) in out.items():
         if not quiet:
-            csv_row(f"fig6/{name}", m * 1e6,
+            csv_row(f"fig6/{label}", m * 1e6,
                     f"slowdown_vs_rdma={m / base:.2f};ci95={ci * 1e6:.0f}us")
     return out
 

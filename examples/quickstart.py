@@ -1,38 +1,45 @@
-"""Quickstart: the paper's Listing 1 in 30 lines.
+"""Quickstart: the paper's Listing 1 in 30 lines, on the transport API.
 
 Starts an in-memory SAVIME, a staging server, ships a 3-D velocity field
-through the RDMA-emulated staging path, and queries it back.
+through the RDMA-emulated staging path via a TransferSession, and queries
+it back.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import (Dataset, SavimeServer, StagingClient, StagingServer)
+from repro.core import SavimeServer, StagingServer
+from repro.transport import TransferSession, TransportConfig
 
 savime = SavimeServer().start()
 staging = StagingServer(savime.addr, mem_capacity=1 << 30).start()
 
-# --- the paper's Listing 1 -------------------------------------------------
-st = StagingClient(staging.addr, io_threads=1, block_size=16 << 20)
-st.run_savime('create_tar(velocity, "x:0:200, y:0:125, z:0:125", "v:float64")')
+# --- the paper's Listing 1, one session per compute job --------------------
+cfg = TransportConfig(staging_addr=staging.addr, io_threads=1,
+                      block_size=16 << 20)
+with TransferSession("rdma_staged", cfg) as st:
+    st.run_savime('create_tar(velocity, "x:0:200, y:0:125, z:0:125", '
+                  '"v:float64")')
+    v = np.random.default_rng(0).standard_normal((201, 126, 126))
+    fut = st.write("D", v)           # asynchronous: returns a future
+    st.sync()                        # block until writes reached staging
+    st.drain()                       # (benchmark hook: staging -> SAVIME done)
+    assert fut.done()
+    st.run_savime('load_subtar(velocity, D, "0,0,0", "201,126,126", v)')
+    # -----------------------------------------------------------------------
 
-v = np.random.default_rng(0).standard_normal((201, 126, 126))
-ds = Dataset("D", "float64", st)
-ds.write(v)                      # asynchronous: returns immediately
-st.sync()                        # block until writes reached staging
-st.drain()                       # (benchmark hook: staging -> SAVIME done)
-st.run_savime('load_subtar(velocity, D, "0,0,0", "201,126,126", v)')
-# ---------------------------------------------------------------------------
+    mean = st.run_savime("aggregate(velocity, v, mean)")
+    corner = st.run_savime('aggregate(velocity, v, max, "0,0,0", "10,10,10")')
+    print(f"mean(v) via SAVIME = {mean:.6f}   (numpy: {v.mean():.6f})")
+    print(f"max over [0:10]^3  = {corner:.6f} "
+          f"(numpy: {v[:11, :11, :11].max():.6f})")
+    assert np.isclose(mean, v.mean())
+    print("server:", {k: s for k, s in st.server_stats().items()
+                      if k in ("datasets", "bytes_in", "registrations")})
 
-mean = st.run_savime("aggregate(velocity, v, mean)")
-corner = st.run_savime('aggregate(velocity, v, max, "0,0,0", "10,10,10")')
-print(f"mean(v) via SAVIME = {mean:.6f}   (numpy: {v.mean():.6f})")
-print(f"max over [0:10]^3  = {corner:.6f} (numpy: {v[:11, :11, :11].max():.6f})")
-assert np.isclose(mean, v.mean())
-
-print("stats:", {k: s for k, s in st.stats().items()
-                 if k in ("datasets", "bytes_in", "registrations")})
-st.close()
+print(f"session: {st.stats.nbytes / 1e6:.1f} MB in "
+      f"{st.stats.to_staging_s:.3f}s to staging "
+      f"({st.stats.staging_gbps:.2f} GB/s)")
 staging.stop()
 savime.stop()
 print("OK")

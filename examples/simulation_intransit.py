@@ -18,8 +18,12 @@ N_STEPS = 12
 savime = SavimeServer().start()
 staging = StagingServer(savime.addr, mem_capacity=2 << 30,
                         send_threads=2).start()
+# the sink rides the pluggable transport API; swap transport="scp_mem"
+# (and pass savime.addr) to demo the paper's baseline path instead
 sink = InTransitSink(staging.addr,
-                     InTransitConfig(io_threads=2, tar_prefix="sim"))
+                     InTransitConfig(io_threads=2, tar_prefix="sim",
+                                     transport="rdma_staged",
+                                     max_inflight_bytes=256 << 20))
 
 analysis_rows = []
 stop = threading.Event()

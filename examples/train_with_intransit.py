@@ -38,7 +38,9 @@ print(f"[setup] {cfg.name}: {cfg.param_count() / 1e6:.2f}M params")
 savime = SavimeServer().start()
 staging = StagingServer(savime.addr).start()
 sink = InTransitSink(staging.addr,
-                     InTransitConfig(io_threads=2, tar_prefix="train"))
+                     InTransitConfig(io_threads=2, tar_prefix="train",
+                                     transport="rdma_staged",
+                                     max_inflight_bytes=512 << 20))
 
 setup = TrainSetup(model, mesh, TrainConfig(
     peak_lr=5e-3, warmup_steps=20, total_steps=args.steps,

@@ -2,11 +2,12 @@
 
 Backends:
   dir      — .npy shards + manifest.json in a directory (restore side).
-  staging  — checkpoint shards are libstaging datasets: the write is
-             asynchronous (paper's producer never blocks), lands in tmpfs,
-             is forwarded to SAVIME by the FCFS pool, and is queryable as
-             TARS arrays (a checkpoint you can *analyze* in place). A
-             dir copy is kept for restore.
+  staging  — checkpoint shards ride the in-transit sink's TransferSession
+             (any registered transport; rdma_staged by default): the write
+             is asynchronous (paper's producer never blocks), lands in
+             tmpfs, is forwarded to SAVIME by the FCFS pool, and is
+             queryable as TARS arrays (a checkpoint you can *analyze* in
+             place). A dir copy is kept for restore.
 
 Restore is mesh-shape agnostic: leaves are device_put against the target
 mesh's shardings (elastic restart: 512 -> 256 chips just works).
@@ -21,7 +22,6 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
-from repro.core.client import Dataset
 from repro.core.intransit import InTransitSink
 from repro.core.queues import FCFSPool
 

@@ -8,13 +8,14 @@ dataset), Python/NumPy edition of the C++ API in Listing 1:
     st.sync()              # block until all writes reached staging
     st.run_savime("load_subtar(...);")
 
-`write` pushes a task to the communicator's local queue; a pool of I/O
-threads consumes tasks (producer-consumer). The buffer must not be mutated
-until sync() returns (it is pinned by reference until sent).
+Since the transport API redesign both ``StagingClient`` and ``Dataset``
+are thin facades over :class:`repro.transport.TransferSession` with the
+``rdma_staged`` transport — pinning, backpressure and per-dataset futures
+come from the session (see DESIGN.md §7).  ``Communicator`` remains the
+low-level engine room the staged transport drives directly.
 """
 from __future__ import annotations
 
-import threading
 from typing import Optional, Union
 
 import numpy as np
@@ -36,14 +37,10 @@ class Communicator:
         self.block_size = block_size
         self._pool = FCFSPool(io_threads, "libstaging-io",
                               straggler_timeout=straggler_timeout)
-        self._local = threading.local()
+        self._socks = wire.ConnCache()   # one conn (≈ RC QP) per I/O thread
 
     def _conn(self):
-        sock = getattr(self._local, "sock", None)
-        if sock is None:  # one control connection (≈ RC QP) per I/O thread
-            sock = wire.connect(self.addr)
-            self._local.sock = sock
-        return sock
+        return self._socks.get(self.addr)
 
     def _request(self, header: dict, payload=None) -> dict:
         h, _ = wire.request(self._conn(), header, payload)
@@ -82,52 +79,47 @@ class Communicator:
         self._pool.sync(timeout)
 
     def stop(self) -> None:
-        self._pool.stop()
+        self._pool.stop()                # joins in-flight transfers first
+        self._socks.close_all()          # per-thread QPs die with the pool
 
 
 class StagingClient:
-    """The paper's ``staging::server`` handle."""
+    """The paper's ``staging::server`` handle (now a TransferSession facade)."""
 
     def __init__(self, addr: str, io_threads: int = 1,
                  block_size: int = 64 << 20,
-                 straggler_timeout: Optional[float] = None):
-        self.comm = Communicator(addr, io_threads, block_size,
-                                 straggler_timeout)
-        self._ctrl = wire.connect(addr)
-        self._ctrl_lock = threading.Lock()
+                 straggler_timeout: Optional[float] = None,
+                 max_inflight_bytes: Optional[int] = None):
+        # imported lazily: repro.transport's engine modules import this
+        # module for Communicator
+        from repro.transport import TransferSession, TransportConfig
+        self.session = TransferSession("rdma_staged", TransportConfig(
+            staging_addr=addr, io_threads=io_threads, block_size=block_size,
+            straggler_timeout=straggler_timeout,
+            max_inflight_bytes=max_inflight_bytes)).open()
+
+    @property
+    def comm(self) -> Communicator:
+        return self.session.transport.comm
 
     def run_savime(self, q: str):
         """Proxy a SAVIME operator through staging (compute nodes cannot
         reach the analytical network directly — paper §3.1)."""
-        with self._ctrl_lock:
-            h, _ = wire.request(self._ctrl, {"op": "run_savime", "q": q})
-        if not h.get("ok"):
-            raise RuntimeError(f"savime error: {h.get('error')}")
-        return h.get("result")
+        return self.session.run_savime(q)
 
     def sync(self, timeout: Optional[float] = None) -> None:
         """Block until all queued writes are fully received by staging."""
-        self.comm.sync(timeout)
+        self.session.sync(timeout)
 
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until staging finished forwarding to SAVIME (benchmarks)."""
-        with self._ctrl_lock:
-            h, _ = wire.request(self._ctrl, {"op": "drain",
-                                             "timeout": timeout})
-        if not h.get("ok"):
-            raise RuntimeError(h.get("error"))
+        self.session.drain(timeout)
 
     def stats(self) -> dict:
-        with self._ctrl_lock:
-            h, _ = wire.request(self._ctrl, {"op": "stats"})
-        return h
+        return self.session.server_stats()
 
     def close(self) -> None:
-        self.comm.stop()
-        try:
-            self._ctrl.close()
-        except OSError:
-            pass
+        self.session.close()
 
 
 class Dataset:
@@ -137,14 +129,12 @@ class Dataset:
         self.name = name
         self.dtype = dtype
         self.server = server
-        self._handles: list[TaskHandle] = []
+        self._handles: list = []
 
-    def write(self, buf: Buf, nbytes: Optional[int] = None) -> TaskHandle:
-        """Non-blocking; buffer pinned (by reference) until sync()."""
-        arr = np.frombuffer(buf, dtype=np.uint8) if not isinstance(buf, np.ndarray) \
-            else buf
-        if nbytes is not None:
-            arr = arr.reshape(-1).view(np.uint8)[:nbytes]
-        h = self.server.comm.submit(self.name, self.dtype, arr)
-        self._handles.append(h)
-        return h
+    def write(self, buf: Buf, nbytes: Optional[int] = None):
+        """Non-blocking; buffer pinned (by the session) until completion.
+        Returns a :class:`repro.transport.DatasetFuture`."""
+        fut = self.server.session.write(self.name, buf, dtype=self.dtype,
+                                        nbytes=nbytes)
+        self._handles.append(fut)
+        return fut

@@ -25,7 +25,7 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.client import Dataset, StagingClient
+from repro.transport import TransferSession, TransportConfig
 
 MAX_STEPS = 1_000_000  # upper bound of the `step` dimension in DDL
 
@@ -38,6 +38,8 @@ class InTransitConfig:
     quant_block: int = 4096       # elements per quantization block
     tar_prefix: str = "run"
     straggler_timeout: Optional[float] = None
+    transport: str = "rdma_staged"   # any registered transport name
+    max_inflight_bytes: Optional[int] = None  # egress backpressure bound
 
 
 def quantize_int8_np(x: np.ndarray, block: int) -> tuple[np.ndarray, np.ndarray]:
@@ -60,19 +62,34 @@ def dequantize_int8_np(q: np.ndarray, scale: np.ndarray, shape, block: int):
 
 
 class InTransitSink:
-    """Asynchronous egress of named arrays into SAVIME via staging."""
+    """Asynchronous egress of named arrays into SAVIME via a
+    :class:`~repro.transport.TransferSession`.
 
-    def __init__(self, staging_addr: str,
-                 cfg: InTransitConfig = InTransitConfig()):
+    ``addr`` is the staging server for the default ``rdma_staged``
+    transport, or the SAVIME address for the copy-emulation transports
+    (``cfg.transport`` names any registered engine).
+    """
+
+    def __init__(self, addr: str, cfg: InTransitConfig = InTransitConfig()):
         self.cfg = cfg
-        self.client = StagingClient(staging_addr, io_threads=cfg.io_threads,
-                                    block_size=cfg.block_size,
-                                    straggler_timeout=cfg.straggler_timeout)
+        staged = cfg.transport == "rdma_staged"
+        self.session = TransferSession(cfg.transport, TransportConfig(
+            staging_addr=addr if staged else None,
+            savime_addr=None if staged else addr,
+            io_threads=cfg.io_threads, block_size=cfg.block_size,
+            straggler_timeout=cfg.straggler_timeout,
+            max_inflight_bytes=cfg.max_inflight_bytes)).open()
         self._tars: set[str] = set()
         self._pending: list[str] = []        # load_subtar DDL to run at flush
         self._lock = threading.Lock()
         self.staged_bytes = 0
         self.staged_arrays = 0
+
+    @property
+    def client(self):
+        """Back-compat alias: the session speaks the old StagingClient
+        surface (sync / drain / run_savime / close)."""
+        return self.session
 
     # ------------------------------------------------------------------
     def _ensure_tar(self, tar: str, shape: tuple[int, ...], dtype: str,
@@ -88,9 +105,9 @@ class InTransitSink:
             dims = ", ".join([f"step:0:{MAX_STEPS}"] +
                              [f"d{i}:0:{n - 1}" for i, n in enumerate(shape)])
             attr = f"v:{dtype}"
-        self.client.run_savime(f'create_tar({tar}, "{dims}", "{attr}")')
+        self.session.run_savime(f'create_tar({tar}, "{dims}", "{attr}")')
         if quantized:
-            self.client.run_savime(
+            self.session.run_savime(
                 f'create_tar({tar}__scale, "step:0:{MAX_STEPS}, '
                 f'b:0:{MAX_STEPS}", "s:float32")')
         self._tars.add(tar)
@@ -107,8 +124,8 @@ class InTransitSink:
         shape = ",".join(["1"] + [str(n) for n in x.shape])
         if quantized:
             q, scale = quantize_int8_np(x, self.cfg.quant_block)
-            Dataset(ds_name, "int8", self.client).write(q)
-            Dataset(ds_name + "s", "float32", self.client).write(scale)
+            self.session.write(ds_name, q, dtype="int8")
+            self.session.write(ds_name + "s", scale, dtype="float32")
             with self._lock:
                 self._pending.append(
                     f'load_subtar({tar}, {ds_name}, "{step},0", '
@@ -118,8 +135,8 @@ class InTransitSink:
                     f'"{step},0", "1,{scale.size}", s)')
             self.staged_bytes += q.nbytes + scale.nbytes
         else:
-            Dataset(ds_name, str(x.dtype), self.client).write(
-                np.ascontiguousarray(x))
+            self.session.write(ds_name, np.ascontiguousarray(x),
+                               dtype=str(x.dtype))
             with self._lock:
                 self._pending.append(
                     f'load_subtar({tar}, {ds_name}, "{origin}", "{shape}", v)')
@@ -139,8 +156,8 @@ class InTransitSink:
         """Block until staged data is queryable in SAVIME (sync + drain +
         pending load_subtar DDL). The hot loop never calls this; analysis
         clients / checkpoint barriers do."""
-        self.client.sync(timeout)
-        self.client.drain(timeout)
+        self.session.sync(timeout)
+        self.session.drain(timeout)
         with self._lock:
             pending, self._pending = self._pending, []
         seen = set()
@@ -150,10 +167,10 @@ class InTransitSink:
             if q in seen:
                 continue
             seen.add(q)
-            self.client.run_savime(q)
+            self.session.run_savime(q)
 
     def close(self) -> None:
         try:
             self.flush()
         finally:
-            self.client.close()
+            self.session.close()

@@ -31,6 +31,7 @@ class TaskHandle:
         self.started_at: Optional[float] = None
         self.finished_at: Optional[float] = None
         self._lock = threading.Lock()
+        self._callbacks: list[Callable[["TaskHandle"], None]] = []
 
     def complete(self, result=None, error=None) -> bool:
         """First completion wins (duplicate speculative runs are ignored)."""
@@ -40,7 +41,21 @@ class TaskHandle:
             self.result, self.error = result, error
             self.finished_at = time.perf_counter()
             self.done.set()
-            return True
+            callbacks, self._callbacks = self._callbacks, []
+        for cb in callbacks:
+            try:
+                cb(self)
+            except Exception:  # noqa: BLE001 — callbacks must not kill workers
+                pass
+        return True
+
+    def add_done_callback(self, fn: Callable[["TaskHandle"], None]) -> None:
+        """Run ``fn(handle)`` once on completion (immediately if done)."""
+        with self._lock:
+            if not self.done.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
 
     def wait(self, timeout: Optional[float] = None):
         if not self.done.wait(timeout):
@@ -71,6 +86,7 @@ class FCFSPool:
         self._pending = 0
         self._pending_lock = threading.Condition()
         self._stop = threading.Event()
+        self._stop_callbacks: list[Callable[[], None]] = []
         self.completed: list[TaskHandle] = []
         self._threads = [
             threading.Thread(target=self._worker, name=f"{name}-{i}",
@@ -105,10 +121,34 @@ class FCFSPool:
                         raise TimeoutError(f"{self.name}.sync timed out")
                 self._pending_lock.wait(remaining)
 
-    def stop(self) -> None:
+    def add_stop_callback(self, fn: Callable[[], None]) -> None:
+        """Resource cleanup to run when the pool stops (e.g. closing the
+        thread-local sockets its workers opened)."""
+        self._stop_callbacks.append(fn)
+
+    def stop(self, timeout: Optional[float] = 30.0) -> None:
+        """Stop accepting work, let in-flight tasks finish, then run the
+        cleanup callbacks.  Joining before cleanup matters: callbacks close
+        the workers' thread-local sockets, which must not happen while a
+        worker is mid-transfer (a task that was going to succeed would
+        fail).  ``timeout`` bounds the total join wait (socket timeouts
+        bound each task anyway); queued-but-unstarted tasks are abandoned,
+        as before."""
         self._stop.set()
         for _ in self._threads:
             self._q.put(None)
+        deadline = time.monotonic() + timeout if timeout else None
+        for t in self._threads:
+            if t is threading.current_thread() or not t.is_alive():
+                continue
+            remaining = None if deadline is None else \
+                max(deadline - time.monotonic(), 0.0)
+            t.join(remaining)
+        for fn in self._stop_callbacks:
+            try:
+                fn()
+            except Exception:  # noqa: BLE001 — best-effort cleanup
+                pass
 
     # -- internals -----------------------------------------------------------
     def _worker(self) -> None:

@@ -183,8 +183,14 @@ class StagingServer:
 
     # -- background forward (FCFS pool) ---------------------------------
     def _send_to_savime(self, ds: _Dataset) -> None:
-        cli = self._savime()
-        cli.load_dataset_from_file(ds.name, ds.dtype, ds.region.fd, ds.nbytes)
+        try:
+            cli = self._savime()
+            cli.load_dataset_from_file(ds.name, ds.dtype, ds.region.fd,
+                                       ds.nbytes)
+        except OSError:
+            if self._stop.is_set():
+                return    # stop() already closed the regions mid-forward
+            raise
         self.stats["bytes_to_savime"] += ds.nbytes
         ds.region.close(unlink=True)  # release tmpfs memory (paper §3.2)
         self._datasets.pop(ds.file_id, None)

@@ -1,323 +1,73 @@
-"""Transfer engines: the staged-RDMA path vs the paper's §4 baselines.
+"""DEPRECATED — transfer engines live in :mod:`repro.transport` now.
 
-Engines (all use real sockets / real tmpfs files / real sendfile on this
-host — scaled datasets, same mechanisms; see DESIGN.md §6 scaling honesty):
+The staged-RDMA path and the paper's §4 baselines (scp_mem, scp_disk,
+ssh_direct — see DESIGN.md §6 scaling honesty) are registered transports:
 
-  rdma_staged  libstaging -> staging server (shm one-sided writes, block
-               knob, FCFS pool) -> SAVIME via sendfile.      [the paper]
-  scp_mem      pdsh+scp emulation into tmpfs on the staging node: TCP with
-               16 KiB userspace copies + per-chunk CRC (cipher-cost proxy).
-  scp_disk     same but staging storage is disk, fsync'd ("huge overhead,
-               18x slower" — paper Fig 6).
-  ssh_direct   SSH-tunnel emulation: two chained TCP hops (compute->staging
-               ->SAVIME), userspace copies + CRC at every hop, no staging
-               store ("about 4 minutes" — paper §4).
+    from repro.transport import TransferSession, TransportConfig, create
 
-Each engine reports wall-clock to-staging and end-to-end (drained) times.
+    cfg = TransportConfig(savime_addr=sv.addr, block_size=16 << 20)
+    with TransferSession("scp_disk", cfg) as sess:
+        sess.write("D", buf)
+        sess.sync(); sess.drain()
+    stats = sess.stats          # TransferStats, per-phase timings
+
+This module keeps the old entry points (``run_rdma_staged`` /
+``run_scp`` / ``run_ssh_direct`` / ``ENGINES``) working for one release;
+every call emits a :class:`DeprecationWarning`.  ``TransferResult`` is an
+alias of :class:`repro.transport.TransferStats` (same leading fields).
+The emulation internals (``_CopyServer`` et al.) moved to
+:mod:`repro.transport.copyemu` and are re-exported for back-compat.
 """
 from __future__ import annotations
 
-import dataclasses
-import os
-import secrets
-import socket
-import threading
-import time
-import zlib
+import warnings
 from typing import Optional
 
 import numpy as np
 
-from repro.core import wire
-from repro.core.client import Dataset, StagingClient
-from repro.core.queues import FCFSPool
-from repro.core.savime import SavimeClient
 from repro.core.staging import StagingServer
+from repro.transport import TransferStats, TransportConfig, run_engine
+from repro.transport.copyemu import (  # noqa: F401 — back-compat re-exports
+    _SCP_CHUNK, _CopyServer, _CopyServerFwdToSavime, _copy_send,
+)
 
-_SCP_CHUNK = 16 << 10   # scp/ssh move data through ~16K cipher blocks
-
-
-@dataclasses.dataclass
-class TransferResult:
-    engine: str
-    nbytes: int
-    n_datasets: int
-    to_staging_s: float
-    end_to_end_s: float
-
-    @property
-    def staging_gbps(self) -> float:
-        return self.nbytes / max(self.to_staging_s, 1e-9) / 1e9
+TransferResult = TransferStats   # old name, same leading fields
 
 
-# ---------------------------------------------------------------------------
-# scp / ssh emulation servers
-# ---------------------------------------------------------------------------
-
-
-class _CopyServer:
-    """Receives frames with userspace 16K copies + CRC; stores (scp) or
-    forwards (ssh tunnel hop)."""
-
-    def __init__(self, store_dir: Optional[str], fsync: bool,
-                 forward_addr: Optional[str] = None,
-                 savime_addr: Optional[str] = None,
-                 disk_bw: Optional[float] = None):
-        self.store_dir = store_dir
-        self.fsync = fsync
-        self.forward_addr = forward_addr
-        self.savime_addr = savime_addr
-        self.disk_bw = disk_bw  # B/s cap modeling the paper's 2018 disk array
-        self._local = threading.local()
-        self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
-        self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
-        self._srv.bind(("127.0.0.1", 0))
-        self._srv.listen(64)
-        self.addr = f"127.0.0.1:{self._srv.getsockname()[1]}"
-        self._stop = threading.Event()
-        threading.Thread(target=self._accept, daemon=True,
-                         name="copysrv-accept").start()
-
-    def stop(self):
-        self._stop.set()
-        try:
-            self._srv.close()
-        except OSError:
-            pass
-
-    def _accept(self):
-        while not self._stop.is_set():
-            try:
-                conn, _ = self._srv.accept()
-            except OSError:
-                return
-            threading.Thread(target=self._serve, args=(conn,), daemon=True,
-                             name="copysrv-conn").start()
-
-    def _serve(self, conn: socket.socket):
-        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        with conn:
-            while True:
-                try:
-                    header, payload = self._recv_copied(conn)
-                except (ConnectionError, OSError):
-                    return
-                try:
-                    self._sink(header, payload)
-                    wire.send_frame(conn, {"ok": True})
-                except Exception as e:  # noqa: BLE001
-                    try:
-                        wire.send_frame(conn, {"ok": False, "error": str(e)})
-                    except OSError:
-                        return
-
-    def _recv_copied(self, conn):
-        """recv with deliberate userspace chunk copies + CRC per chunk —
-        models scp/ssh's copy+cipher CPU path (vs sendfile/RDMA zero-copy)."""
-        import json
-        import struct
-        raw = b""
-        while len(raw) < 8:
-            r = conn.recv(8 - len(raw))
-            if not r:
-                raise ConnectionError("closed")
-            raw += r
-        hlen = struct.unpack(">Q", raw)[0]
-        hb = b""
-        while len(hb) < hlen:
-            r = conn.recv(hlen - len(hb))
-            if not r:
-                raise ConnectionError("closed")
-            hb += r
-        header = json.loads(hb)
-        nbytes = header.get("nbytes", 0)
-        out = bytearray()
-        crc = 0
-        while len(out) < nbytes:
-            chunk = conn.recv(min(_SCP_CHUNK, nbytes - len(out)))
-            if not chunk:
-                raise ConnectionError("closed")
-            crc = zlib.crc32(chunk, crc)          # cipher-cost proxy
-            out += chunk                           # userspace copy
-        header["crc"] = crc
-        return header, out
-
-    def _sink(self, header, payload):
-        if self.store_dir is not None:            # scp: store at staging
-            path = os.path.join(self.store_dir, header["name"])
-            t0 = time.perf_counter()
-            with open(path, "wb") as f:
-                f.write(payload)
-                if self.fsync:
-                    f.flush()
-                    os.fsync(f.fileno())
-            if self.disk_bw:  # container disk is NVMe-fast; model the
-                # paper's spinning-disk staging storage when asked to
-                budget = len(payload) / self.disk_bw
-                spent = time.perf_counter() - t0
-                if budget > spent:
-                    time.sleep(budget - spent)
-            header["path"] = path
-        elif self.forward_addr:                    # ssh hop: forward copied
-            sock = getattr(self._local, "fwd", None)
-            if sock is None:
-                sock = wire.connect(self.forward_addr)
-                self._local.fwd = sock
-            h, _ = wire.request(sock, {"op": "fwd", "name": header["name"],
-                                       "dtype": header.get("dtype", "uint8")},
-                                payload)
-            if not h.get("ok"):
-                raise RuntimeError(h.get("error"))
-        elif self.savime_addr:                     # final hop into SAVIME
-            cli = getattr(self._local, "savime", None)
-            if cli is None:
-                cli = SavimeClient(self.savime_addr)
-                self._local.savime = cli
-            cli.load_dataset(header["name"], header.get("dtype", "uint8"),
-                             payload)
-
-
-def _copy_send(addr_local: threading.local, addr: str, name: str,
-               dtype: str, buf: np.ndarray):
-    """Client side of the scp/ssh emulation: chunked sendall with CRC."""
-    sock = getattr(addr_local, "sock", None)
-    if sock is None:
-        sock = wire.connect(addr)
-        addr_local.sock = sock
-    payload = memoryview(buf.reshape(-1).view(np.uint8))
-    import json
-    import struct
-    hb = json.dumps({"name": name, "dtype": dtype,
-                     "nbytes": len(payload)}).encode()
-    sock.sendall(struct.pack(">Q", len(hb)) + hb)
-    crc = 0
-    for off in range(0, len(payload), _SCP_CHUNK):
-        chunk = bytes(payload[off:off + _SCP_CHUNK])  # userspace copy
-        crc = zlib.crc32(chunk, crc)                  # cipher-cost proxy
-        sock.sendall(chunk)
-    h, _ = wire.recv_frame(sock)
-    if not h.get("ok"):
-        raise RuntimeError(h.get("error"))
-
-
-# ---------------------------------------------------------------------------
-# engine drivers
-# ---------------------------------------------------------------------------
+def _deprecated(old: str, engine: str) -> None:
+    warnings.warn(
+        f"repro.core.transfer.{old}() is deprecated; use "
+        f"repro.transport.TransferSession({engine!r}, cfg) or "
+        f"repro.transport.run_engine({engine!r}, ...)",
+        DeprecationWarning, stacklevel=3)
 
 
 def run_rdma_staged(buffers: list[np.ndarray], names: list[str], *,
                     savime_addr: str, block_size: int, io_threads: int,
                     mem_capacity: int = 8 << 30,
-                    staging: Optional[StagingServer] = None) -> TransferResult:
-    own = staging is None
-    if own:
-        staging = StagingServer(savime_addr, mem_capacity=mem_capacity,
-                                send_threads=2).start()
-    client = StagingClient(staging.addr, io_threads=io_threads,
-                           block_size=block_size)
-    try:
-        t0 = time.perf_counter()
-        for name, buf in zip(names, buffers):
-            Dataset(name, str(buf.dtype), client).write(buf)
-        client.sync()
-        t_staging = time.perf_counter() - t0
-        client.drain()
-        t_total = time.perf_counter() - t0
-    finally:
-        client.close()
-        if own:
-            staging.stop()
-    n = sum(b.nbytes for b in buffers)
-    return TransferResult("rdma_staged", n, len(buffers), t_staging, t_total)
+                    staging: Optional[StagingServer] = None) -> TransferStats:
+    _deprecated("run_rdma_staged", "rdma_staged")
+    cfg = TransportConfig(savime_addr=savime_addr,
+                          staging_addr=staging.addr if staging else None,
+                          block_size=block_size, io_threads=io_threads,
+                          mem_capacity=mem_capacity)
+    return run_engine("rdma_staged", buffers, names, cfg)
 
 
 def run_scp(buffers: list[np.ndarray], names: list[str], *,
             savime_addr: str, storage: str, io_threads: int,
-            disk_bw: Optional[float] = None) -> TransferResult:
-    """pdsh+scp emulation: copy files to staging storage (mem|disk), then
-    staging forwards to SAVIME via the normal (sendfile) API. `disk_bw`
-    optionally caps store throughput to the paper's disk hardware class."""
-    uid = secrets.token_hex(3)
-    store = (f"/dev/shm/scp-{uid}" if storage == "mem" else f"/tmp/scp-{uid}")
-    os.makedirs(store, exist_ok=True)
-    srv = _CopyServer(store_dir=store, fsync=(storage == "disk"),
-                      disk_bw=disk_bw if storage == "disk" else None)
-    tls = threading.local()
-    pool = FCFSPool(io_threads, "scp")
-    fwd_pool = FCFSPool(2, "scp-fwd")
-    savime_local = threading.local()
-
-    def forward(name, dtype, path, nbytes):
-        cli = getattr(savime_local, "cli", None)
-        if cli is None:
-            cli = SavimeClient(savime_addr)
-            savime_local.cli = cli
-        fd = os.open(path, os.O_RDONLY)
-        try:
-            cli.load_dataset_from_file(name, dtype, fd, nbytes)
-        finally:
-            os.close(fd)
-            os.unlink(path)
-
-    try:
-        t0 = time.perf_counter()
-        for name, buf in zip(names, buffers):
-            pool.submit(_copy_send, tls, srv.addr, name, str(buf.dtype), buf,
-                        name=f"scp-{name}")
-        pool.sync()
-        t_staging = time.perf_counter() - t0
-        for name, buf in zip(names, buffers):
-            fwd_pool.submit(forward, name, str(buf.dtype),
-                            os.path.join(store, name), buf.nbytes,
-                            name=f"fwd-{name}")
-        fwd_pool.sync()
-        t_total = time.perf_counter() - t0
-    finally:
-        pool.stop()
-        fwd_pool.stop()
-        srv.stop()
-    n = sum(b.nbytes for b in buffers)
-    return TransferResult(f"scp_{storage}", n, len(buffers), t_staging, t_total)
+            disk_bw: Optional[float] = None) -> TransferStats:
+    _deprecated("run_scp", f"scp_{storage}")
+    cfg = TransportConfig(savime_addr=savime_addr, io_threads=io_threads,
+                          disk_bw=disk_bw)
+    return run_engine(f"scp_{storage}", buffers, names, cfg)
 
 
 def run_ssh_direct(buffers: list[np.ndarray], names: list[str], *,
-                   savime_addr: str, io_threads: int) -> TransferResult:
-    """SSH-tunnel emulation: compute -> staging hop -> SAVIME, userspace
-    copies + CRC at both hops, no staging store (paper §4 last baseline)."""
-    hop2 = _CopyServerFwdToSavime(savime_addr)
-    hop1 = _CopyServer(store_dir=None, fsync=False, forward_addr=hop2.addr)
-    tls = threading.local()
-    pool = FCFSPool(io_threads, "ssh")
-    try:
-        t0 = time.perf_counter()
-        for name, buf in zip(names, buffers):
-            pool.submit(_copy_send, tls, hop1.addr, name, str(buf.dtype), buf,
-                        name=f"ssh-{name}")
-        pool.sync()
-        t_total = time.perf_counter() - t0
-    finally:
-        pool.stop()
-        hop1.stop()
-        hop2.stop()
-    n = sum(b.nbytes for b in buffers)
-    return TransferResult("ssh_direct", n, len(buffers), t_total, t_total)
-
-
-class _CopyServerFwdToSavime(_CopyServer):
-    """Second tunnel hop: copied recv, then SAVIME ingest."""
-
-    def __init__(self, savime_addr: str):
-        super().__init__(store_dir=None, fsync=False,
-                         savime_addr=savime_addr)
-
-    def _sink(self, header, payload):
-        if header.get("op") == "fwd" or True:
-            cli = getattr(self._local, "savime", None)
-            if cli is None:
-                cli = SavimeClient(self.savime_addr)
-                self._local.savime = cli
-            cli.load_dataset(header["name"], header.get("dtype", "uint8"),
-                             payload)
+                   savime_addr: str, io_threads: int) -> TransferStats:
+    _deprecated("run_ssh_direct", "ssh_direct")
+    cfg = TransportConfig(savime_addr=savime_addr, io_threads=io_threads)
+    return run_engine("ssh_direct", buffers, names, cfg)
 
 
 ENGINES = {

@@ -84,3 +84,37 @@ def connect(addr: str, timeout: float = 30.0) -> socket.socket:
     s = socket.create_connection((host, int(port)), timeout=timeout)
     s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
     return s
+
+
+class ConnCache:
+    """One cached connection per calling thread, all tracked for close.
+
+    The I/O pools want one connection per worker thread (≈ an RC QP, or
+    an ssh session in the copy emulation); ``close_all`` is hooked to the
+    owner's stop path so no connection outlives its pool.  ``factory``
+    may build anything with a ``close()`` method (sockets, clients).
+    """
+
+    def __init__(self):
+        import threading
+        self._local = threading.local()
+        self._all: list = []
+        self._lock = threading.Lock()
+
+    def get(self, addr: str, factory=connect):
+        obj = getattr(self._local, "obj", None)
+        if obj is None:
+            obj = factory(addr)
+            self._local.obj = obj
+            with self._lock:
+                self._all.append(obj)
+        return obj
+
+    def close_all(self) -> None:
+        with self._lock:
+            objs, self._all = self._all, []
+        for o in objs:
+            try:
+                o.close()
+            except (OSError, RuntimeError):
+                pass

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import transport
 from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import Model
@@ -40,6 +41,9 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--intransit", action="store_true",
                     help="stage per-step latencies into SAVIME")
+    ap.add_argument("--transport", default="rdma_staged",
+                    choices=transport.available(),
+                    help="egress engine for the in-transit sink")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -64,8 +68,11 @@ def main() -> None:
                                 StagingServer)
         savime = SavimeServer().start()
         staging = StagingServer(savime.addr).start()
-        sink = InTransitSink(staging.addr,
-                             InTransitConfig(tar_prefix="serve"))
+        sink_addr = (staging.addr if args.transport == "rdma_staged"
+                     else savime.addr)
+        sink = InTransitSink(sink_addr,
+                             InTransitConfig(tar_prefix="serve",
+                                             transport=args.transport))
 
     key = jax.random.PRNGKey(2)
     with jax.set_mesh(mesh):

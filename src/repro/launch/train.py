@@ -14,6 +14,7 @@ import time
 import jax
 import numpy as np
 
+from repro import transport
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import InTransitConfig, InTransitSink, SavimeServer, StagingServer
@@ -50,6 +51,9 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--intransit", action="store_true",
                     help="stage per-step diagnostics into SAVIME")
+    ap.add_argument("--transport", default="rdma_staged",
+                    choices=transport.available(),
+                    help="egress engine for the in-transit sink")
     ap.add_argument("--compress-pods", action="store_true")
     ap.add_argument("--egress", default="diag",
                     choices=["none", "diag", "grads_int8"])
@@ -73,9 +77,14 @@ def main() -> None:
     if args.intransit:
         savime = SavimeServer().start()
         staging = StagingServer(savime.addr).start()
-        sink = InTransitSink(staging.addr, InTransitConfig(io_threads=2))
-        print(f"[train] in-transit sink -> staging {staging.addr} "
-              f"-> SAVIME {savime.addr}")
+        # the staged path attaches to staging; copy-emulation transports
+        # (scp_*, ssh_direct) reach SAVIME directly, as the baselines do
+        sink_addr = (staging.addr if args.transport == "rdma_staged"
+                     else savime.addr)
+        sink = InTransitSink(sink_addr, InTransitConfig(
+            io_threads=2, transport=args.transport))
+        print(f"[train] in-transit sink --{args.transport}--> "
+              f"SAVIME {savime.addr}")
 
     ckpt = CheckpointManager(args.ckpt_dir, sink=sink)
     sup = Supervisor(jax.jit(setup.step_fn(), donate_argnums=(0,)), ckpt,

@@ -1,0 +1,182 @@
+"""Transport abstraction — one lifecycle for every egress path.
+
+The paper compares a staged-RDMA pipeline against scp/ssh baselines; the
+repo previously exposed three disjoint APIs for the same act of "move
+blocks from compute to analysis" (StagingClient+Dataset, the run_* engine
+functions, InTransitSink). This module defines the single contract they
+all sit on now — in the spirit of ADIOS2's engine-agnostic IO API:
+
+    Transport        abstract lifecycle: open / write / sync / drain / close
+    TransportConfig  typed configuration shared by every engine
+    TransferStats    per-phase timings (replaces the old TransferResult)
+    registry         string-keyed: @register_transport / create / available
+
+Engines register themselves by name; ``create("scp_disk", cfg)`` is the
+only way an engine is named. User code goes through
+:class:`repro.transport.TransferSession`, which layers buffer pinning,
+backpressure and futures on top of any registered transport.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Callable, Optional
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportConfig:
+    """Configuration shared by all transports.
+
+    Engines ignore fields that do not apply to them (e.g. ``disk_bw`` only
+    matters to ``scp_disk``); unknown one-off knobs go in ``extra``.
+    """
+
+    savime_addr: Optional[str] = None     # analytical endpoint (host:port)
+    staging_addr: Optional[str] = None    # existing staging server, if any
+    block_size: int = 64 << 20            # RDMA block knob (paper Fig 3)
+    io_threads: int = 1                   # client-side FCFS I/O threads
+    send_threads: int = 2                 # staging->SAVIME / forward threads
+    mem_capacity: int = 8 << 30           # staging tmpfs capacity
+    disk_bw: Optional[float] = None       # B/s cap for scp_disk (paper HW)
+    straggler_timeout: Optional[float] = None
+    max_inflight_bytes: Optional[int] = None  # session backpressure bound
+    extra: dict = dataclasses.field(default_factory=dict)
+
+    def replace(self, **kw) -> "TransportConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass
+class TransferStats:
+    """Per-phase timings for one session (replaces ``TransferResult``).
+
+    The first five fields keep the old TransferResult layout so legacy
+    positional construction and attribute access keep working.
+    """
+
+    engine: str
+    nbytes: int = 0
+    n_datasets: int = 0
+    to_staging_s: float = 0.0       # first write -> sync complete
+    end_to_end_s: float = 0.0       # first write -> drain complete
+    open_s: float = 0.0             # transport.open() wall time
+    close_s: float = 0.0            # transport.close() wall time
+    write_wait_s: float = 0.0       # time write() spent blocked (backpressure)
+    peak_inflight_bytes: int = 0    # high-water mark of pinned bytes
+
+    @property
+    def staging_gbps(self) -> float:
+        return self.nbytes / max(self.to_staging_s, 1e-9) / 1e9
+
+    @property
+    def end_to_end_gbps(self) -> float:
+        return self.nbytes / max(self.end_to_end_s, 1e-9) / 1e9
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["staging_gbps"] = self.staging_gbps
+        d["end_to_end_gbps"] = self.end_to_end_gbps
+        return d
+
+
+# ---------------------------------------------------------------------------
+# transport lifecycle
+# ---------------------------------------------------------------------------
+
+
+class Transport(abc.ABC):
+    """Abstract egress engine: open / write / sync / drain / close.
+
+    ``write`` is asynchronous and returns a handle with
+    ``wait(timeout)`` / ``done`` / ``add_done_callback`` semantics (the
+    FCFS :class:`~repro.core.queues.TaskHandle` satisfies this).  ``sync``
+    blocks until every written buffer has reached the staging area (the
+    paper's ``st.sync()``); ``drain`` blocks until data is queryable at
+    the analytical endpoint.  Transports are single-open: ``close`` ends
+    the lifecycle.
+    """
+
+    name: str = "abstract"
+
+    def __init__(self, cfg: TransportConfig):
+        self.cfg = cfg
+
+    @abc.abstractmethod
+    def open(self) -> None:
+        """Allocate connections / servers. Idempotence not required."""
+
+    @abc.abstractmethod
+    def write(self, name: str, dtype: str, buf) -> Any:
+        """Enqueue one named buffer; returns a completion handle."""
+
+    @abc.abstractmethod
+    def sync(self, timeout: Optional[float] = None) -> None:
+        """Block until all written buffers reached staging."""
+
+    @abc.abstractmethod
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until all staged data is queryable at the endpoint."""
+
+    @abc.abstractmethod
+    def close(self) -> None:
+        """Release sockets, pools and owned servers."""
+
+    # -- optional control-plane hooks ----------------------------------
+    def run_savime(self, q: str):
+        """Run an analytical (SAVIME) operator, if this transport has a
+        control path to the endpoint."""
+        raise NotImplementedError(
+            f"transport {self.name!r} has no analytical control path")
+
+    def server_stats(self) -> dict:
+        """Remote-side counters, when the transport exposes them."""
+        return {}
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+class UnknownTransportError(KeyError):
+    pass
+
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_transport(name: str) -> Callable[[type], type]:
+    """Class decorator: ``@register_transport("scp_mem")``."""
+
+    def deco(cls: type) -> type:
+        if name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(f"transport {name!r} already registered "
+                             f"({_REGISTRY[name].__name__})")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def available() -> tuple[str, ...]:
+    """Registered engine names, sorted."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get(name: str) -> type:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownTransportError(
+            f"unknown transport {name!r}; available: {', '.join(available())}"
+        ) from None
+
+
+def create(name: str, cfg: TransportConfig) -> Transport:
+    """Instantiate a registered transport (does not open it)."""
+    return get(name)(cfg)

@@ -1,0 +1,238 @@
+"""TransferSession — the one user-facing way to move data to analysis.
+
+    from repro.transport import TransferSession, TransportConfig
+
+    cfg = TransportConfig(staging_addr=staging.addr, io_threads=2)
+    with TransferSession("rdma_staged", cfg) as sess:
+        fut = sess.write("D", array)        # non-blocking, returns a future
+        sess.sync()                         # all writes reached staging
+        sess.drain()                        # queryable at the endpoint
+    print(sess.stats.staging_gbps)
+
+On top of any registered :class:`~repro.transport.base.Transport` the
+session owns:
+
+  * buffer pinning — a written buffer is referenced until its transfer
+    completes (the paper's "must not be mutated until sync()" contract);
+  * backpressure — ``cfg.max_inflight_bytes`` bounds pinned bytes;
+    ``write`` blocks when the bound would be exceeded (a producer can
+    never run arbitrarily far ahead of the network);
+  * futures — every ``write`` returns a :class:`DatasetFuture`;
+  * metrics — :class:`~repro.transport.base.TransferStats` with per-phase
+    timings, plus optional ``on_event`` hooks for live instrumentation.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.transport.base import (Transport, TransportConfig, TransferStats,
+                                  create)
+
+
+class DatasetFuture:
+    """Completion future for one written dataset."""
+
+    def __init__(self, name: str, nbytes: int, handle):
+        self.name = name
+        self.nbytes = nbytes
+        self._handle = handle
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block until this dataset reached staging; raises on failure."""
+        return self._handle.wait(timeout)
+
+    def done(self) -> bool:
+        return self._handle.done.is_set()
+
+    def add_done_callback(self, fn: Callable) -> None:
+        self._handle.add_done_callback(lambda _h: fn(self))
+
+
+class TransferSession:
+    """Context manager owning one transport lifecycle.
+
+    May also be used non-contextually: ``sess = TransferSession(...).open()``
+    then ``sess.close()``. On clean context exit the session syncs and
+    drains before closing (durability by default); on exception it closes
+    immediately.
+    """
+
+    def __init__(self, transport: "str | Transport",
+                 cfg: Optional[TransportConfig] = None, *,
+                 label: Optional[str] = None,
+                 on_event: Optional[Callable[[dict], None]] = None):
+        if isinstance(transport, Transport):
+            self.transport = transport
+        else:
+            self.transport = create(transport, cfg or TransportConfig())
+        self.cfg = self.transport.cfg
+        self.stats = TransferStats(engine=label or self.transport.name)
+        self.hooks: list[Callable[[dict], None]] = [on_event] if on_event else []
+        self._opened = False
+        self._closed = False
+        self._t0: Optional[float] = None          # first-write clock
+        self._unsynced = False                    # writes since last sync?
+        self._undrained = False                   # writes since last drain?
+        self._cond = threading.Condition()
+        self._inflight = 0                        # pinned, not yet completed
+        self._pinned: dict[int, object] = {}      # future id -> buffer ref
+
+    # -- lifecycle ------------------------------------------------------
+    def open(self) -> "TransferSession":
+        if self._opened:
+            return self
+        t = time.perf_counter()
+        self.transport.open()
+        self.stats.open_s = time.perf_counter() - t
+        self._opened = True
+        self._emit("open")
+        return self
+
+    def __enter__(self) -> "TransferSession":
+        return self.open()
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.sync()
+            self.drain()
+        self.close()
+
+    def close(self) -> None:
+        if self._closed or not self._opened:
+            self._closed = True
+            return
+        t = time.perf_counter()
+        try:
+            self.transport.close()
+        finally:
+            self._closed = True
+            self.stats.close_s = time.perf_counter() - t
+            if self._t0 is not None and self.stats.end_to_end_s == 0.0:
+                self.stats.end_to_end_s = t - self._t0
+            self._emit("close")
+
+    # -- data plane -----------------------------------------------------
+    def write(self, name: str, buf, dtype: Optional[str] = None,
+              nbytes: Optional[int] = None) -> DatasetFuture:
+        """Non-blocking enqueue of one named buffer.
+
+        Blocks only when ``cfg.max_inflight_bytes`` would be exceeded
+        (backpressure); a single buffer larger than the bound is admitted
+        alone rather than deadlocking.
+        """
+        self._check_live()
+        arr = buf if isinstance(buf, np.ndarray) else \
+            np.frombuffer(buf, dtype=np.uint8)
+        if nbytes is not None:
+            arr = arr.reshape(-1).view(np.uint8)[:nbytes]
+        dtype = dtype or str(arr.dtype)
+        size = arr.nbytes
+        limit = self.cfg.max_inflight_bytes
+        t_wait = time.perf_counter()
+        with self._cond:
+            while limit and self._inflight > 0 and \
+                    self._inflight + size > limit:
+                self._cond.wait(0.5)
+            self._inflight += size
+            self.stats.peak_inflight_bytes = max(
+                self.stats.peak_inflight_bytes, self._inflight)
+        self.stats.write_wait_s += time.perf_counter() - t_wait
+        if self._t0 is None:
+            self._t0 = time.perf_counter()
+        handle = self.transport.write(name, dtype, arr)
+        fut = DatasetFuture(name, size, handle)
+        with self._cond:
+            self._pinned[id(fut)] = arr           # pin until completion
+        handle.add_done_callback(lambda _h: self._release(fut))
+        self._unsynced = self._undrained = True
+        self.stats.nbytes += size
+        self.stats.n_datasets += 1
+        self._emit("write", name=name, nbytes=size)
+        return fut
+
+    def write_all(self, names: Sequence[str], buffers: Sequence) \
+            -> list[DatasetFuture]:
+        return [self.write(n, b) for n, b in zip(names, buffers)]
+
+    def _release(self, fut: DatasetFuture) -> None:
+        with self._cond:
+            if self._pinned.pop(id(fut), None) is not None:
+                self._inflight -= fut.nbytes
+            self._cond.notify_all()
+
+    # -- barriers -------------------------------------------------------
+    def sync(self, timeout: Optional[float] = None) -> None:
+        """Block until all written buffers reached staging."""
+        self._check_live()
+        self.transport.sync(timeout)
+        # only the sync that follows new writes defines the phase timing —
+        # the redundant sync on clean __exit__ must not inflate it
+        if self._t0 is not None and self._unsynced:
+            self.stats.to_staging_s = time.perf_counter() - self._t0
+        self._unsynced = False
+        self._emit("sync")
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until staged data is queryable at the endpoint."""
+        self._check_live()
+        self.transport.drain(timeout)
+        if self._t0 is not None and self._undrained:
+            self.stats.end_to_end_s = time.perf_counter() - self._t0
+        self._undrained = False
+        self._emit("drain")
+
+    # -- control plane --------------------------------------------------
+    def run_savime(self, q: str):
+        self._check_live()
+        return self.transport.run_savime(q)
+
+    def server_stats(self) -> dict:
+        self._check_live()
+        return self.transport.server_stats()
+
+    # -- introspection --------------------------------------------------
+    @property
+    def inflight_bytes(self) -> int:
+        with self._cond:
+            return self._inflight
+
+    def add_metrics_hook(self, fn: Callable[[dict], None]) -> None:
+        self.hooks.append(fn)
+
+    def _emit(self, event: str, **kw) -> None:
+        if not self.hooks:
+            return
+        payload = {"event": event, "engine": self.stats.engine, **kw}
+        for fn in self.hooks:
+            try:
+                fn(payload)
+            except Exception:  # noqa: BLE001 — hooks must not break egress
+                pass
+
+    def _check_live(self) -> None:
+        if not self._opened:
+            raise RuntimeError("TransferSession not opened "
+                               "(use `with` or .open())")
+        if self._closed:
+            raise RuntimeError("TransferSession already closed")
+
+
+def run_engine(engine: str, buffers: Sequence, names: Sequence[str],
+               cfg: TransportConfig, *, label: Optional[str] = None,
+               drain: bool = True) -> TransferStats:
+    """One-shot convenience: ship ``buffers`` through ``engine``.
+
+    This is what the old ``run_rdma_staged`` / ``run_scp`` /
+    ``run_ssh_direct`` drivers collapse into.
+    """
+    with TransferSession(engine, cfg, label=label) as sess:
+        for name, buf in zip(names, buffers):
+            sess.write(name, buf)
+        sess.sync()
+        if drain:
+            sess.drain()
+    return sess.stats

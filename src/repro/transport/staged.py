@@ -1,0 +1,85 @@
+"""``rdma_staged`` — the paper's pipeline as a registered Transport.
+
+compute --libstaging(async, RDMA-emulated one-sided block writes)-->
+staging tmpfs --(sendfile, FCFS pool)--> SAVIME.
+
+Connects to an existing staging server (``cfg.staging_addr``) or owns a
+fresh one against ``cfg.savime_addr`` (benchmark mode); an owned server is
+stopped on close.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+from repro.core import wire
+from repro.core.client import Communicator
+from repro.core.staging import StagingServer
+from repro.transport.base import Transport, register_transport
+
+
+@register_transport("rdma_staged")
+class StagedTransport(Transport):
+    """Staged-RDMA egress over libstaging's Communicator."""
+
+    def __init__(self, cfg):
+        super().__init__(cfg)
+        self._staging: Optional[StagingServer] = None   # owned, if any
+        self.comm: Optional[Communicator] = None
+        self._ctrl = None
+        self._ctrl_lock = threading.Lock()
+
+    # -- lifecycle ------------------------------------------------------
+    def open(self) -> None:
+        addr = self.cfg.staging_addr
+        if addr is None:
+            if self.cfg.savime_addr is None:
+                raise ValueError("rdma_staged needs staging_addr (attach) "
+                                 "or savime_addr (own a staging server)")
+            self._staging = StagingServer(
+                self.cfg.savime_addr, mem_capacity=self.cfg.mem_capacity,
+                send_threads=self.cfg.send_threads,
+                straggler_timeout=self.cfg.straggler_timeout).start()
+            addr = self._staging.addr
+        self.comm = Communicator(addr, self.cfg.io_threads,
+                                 self.cfg.block_size,
+                                 self.cfg.straggler_timeout)
+        self._ctrl = wire.connect(addr)
+
+    def close(self) -> None:
+        if self.comm is not None:
+            self.comm.stop()
+        if self._ctrl is not None:
+            try:
+                self._ctrl.close()
+            except OSError:
+                pass
+        if self._staging is not None:
+            self._staging.stop()
+
+    # -- data plane -----------------------------------------------------
+    def write(self, name: str, dtype: str, buf):
+        return self.comm.submit(name, dtype, buf)
+
+    def sync(self, timeout: Optional[float] = None) -> None:
+        self.comm.sync(timeout)
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        self._ctrl_request({"op": "drain", "timeout": timeout})
+
+    # -- control plane --------------------------------------------------
+    def run_savime(self, q: str):
+        """Proxy a SAVIME operator through staging (compute nodes cannot
+        reach the analytical network directly — paper §3.1)."""
+        return self._ctrl_request({"op": "run_savime", "q": q}).get("result")
+
+    def server_stats(self) -> dict:
+        return self._ctrl_request({"op": "stats"})
+
+    def _ctrl_request(self, header: dict) -> dict:
+        with self._ctrl_lock:
+            h, _ = wire.request(self._ctrl, header)
+        if not h.get("ok"):
+            raise RuntimeError(f"staging error: {h.get('error')}")
+        return h

@@ -1,0 +1,105 @@
+"""Minimal, deterministic stand-in for the hypothesis API surface used by
+this repo's property tests.
+
+The container image does not ship ``hypothesis`` (and nothing may be pip
+installed); rather than skipping the whole property suite, tests fall back
+to this shim: each ``@given`` test runs against a fixed number of examples
+drawn from a seeded RNG, so the suite stays deterministic and meaningful.
+Only the strategy combinators this repo uses are implemented
+(``integers``, ``sampled_from``, ``lists``, ``composite``).
+"""
+from __future__ import annotations
+
+import functools
+import itertools
+
+import numpy as np
+
+__all__ = ["given", "settings", "st"]
+
+MAX_EXAMPLES = 25
+_SEED = 0xC0FFEE
+
+
+class Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class _St:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def sampled_from(seq) -> Strategy:
+        seq = list(seq)
+        return Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    @staticmethod
+    def lists(elem: Strategy, min_size: int = 0,
+              max_size: int = 10) -> Strategy:
+        def draw(rng):
+            n = int(rng.integers(min_size, max_size + 1))
+            return [elem.example(rng) for _ in range(n)]
+        return Strategy(draw)
+
+    @staticmethod
+    def composite(fn):
+        @functools.wraps(fn)
+        def make(*args, **kw):
+            def draw_value(rng):
+                return fn(lambda strat: strat.example(rng), *args, **kw)
+            return Strategy(draw_value)
+        return make
+
+
+st = _St()
+
+
+class settings:  # noqa: N801 — mirrors hypothesis' name
+    """Profile management is a no-op in the fallback."""
+
+    _profiles: dict = {}
+
+    def __init__(self, *a, **kw):
+        pass
+
+    @classmethod
+    def register_profile(cls, name, **kw):
+        cls._profiles[name] = kw
+
+    @classmethod
+    def load_profile(cls, name):
+        pass
+
+    def __call__(self, fn):   # used as decorator: @settings(...)
+        return fn
+
+
+def given(*strategies, **kw_strategies):
+    """Run the test body over MAX_EXAMPLES deterministic draws."""
+
+    def deco(fn):
+        def runner():
+            rng = np.random.default_rng(_SEED)
+            for i in itertools.islice(itertools.count(), MAX_EXAMPLES):
+                args = [s.example(rng) for s in strategies]
+                kwargs = {k: s.example(rng) for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, **kwargs)
+                except Exception as e:
+                    raise AssertionError(
+                        f"fallback property test failed on example {i}: "
+                        f"args={args!r} kwargs={kwargs!r}") from e
+        # NB: no functools.wraps here — pytest must see a zero-arg
+        # signature, not the strategy parameters (they are not fixtures)
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return runner
+
+    return deco

@@ -10,7 +10,7 @@ from repro.core import (
     Dataset, InTransitConfig, InTransitSink, SavimeClient, SavimeServer,
     StagingClient, StagingServer,
 )
-from repro.core.transfer import run_rdma_staged, run_scp, run_ssh_direct
+from repro.transport import TransportConfig, run_engine
 
 
 @pytest.fixture()
@@ -124,17 +124,18 @@ def test_intransit_sink_quantized(savime, staging):
 
 
 def test_engines_all_deliver(savime):
+    """Engines are named only via the transport registry."""
     rng = np.random.default_rng(4)
     bufs = [rng.standard_normal(1 << 14) for _ in range(4)]
-    r1 = run_rdma_staged(bufs, [f"a{i}" for i in range(4)],
-                         savime_addr=savime.addr, block_size=64 << 10,
-                         io_threads=2)
-    r2 = run_scp(bufs, [f"b{i}" for i in range(4)], savime_addr=savime.addr,
-                 storage="mem", io_threads=2)
-    r3 = run_ssh_direct(bufs, [f"c{i}" for i in range(4)],
-                        savime_addr=savime.addr, io_threads=2)
+    results = []
+    for tag, engine in (("a", "rdma_staged"), ("b", "scp_mem"),
+                        ("c", "ssh_direct")):
+        cfg = TransportConfig(savime_addr=savime.addr, block_size=64 << 10,
+                              io_threads=2)
+        results.append(run_engine(engine, bufs,
+                                  [f"{tag}{i}" for i in range(4)], cfg))
     assert SavimeClient(savime.addr).stats()["datasets"] == 12
-    assert min(r.nbytes for r in (r1, r2, r3)) == sum(b.nbytes for b in bufs)
+    assert min(r.nbytes for r in results) == sum(b.nbytes for b in bufs)
 
 
 # ---------------------------------------------------------------------------
