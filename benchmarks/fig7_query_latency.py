@@ -1,0 +1,88 @@
+"""Fig 7 (beyond the paper): analytical query latency under concurrent
+ingest, across RDMA block sizes — the reader-side cost of the paper's
+query-while-running goal (§6). A background InTransitSink keeps staging
+new steps while the foreground AnalysisSession measures typed
+select/aggregate latency. Emits one JSON row per (block_size, query
+kind), like roofline's per-cell JSON.
+
+Comparability: every measured query uses a FIXED box over the warm
+steps (data volume per query is constant), ingest is capped at
+``max_steps`` so the subtar list the engine scans stays bounded, and
+each row records the subtar count observed at measurement time.
+"""
+from __future__ import annotations
+
+import json
+import threading
+
+import numpy as np
+
+from benchmarks.common import ci95, fresh_stack
+from repro.analysis import AnalysisSession, tar
+from repro.core import InTransitConfig, InTransitSink
+
+
+def run(blocks_kb=(1024, 4096, 16384), shape=(16, 64, 64), trials=8,
+        warm_steps=3, max_steps=48, quiet=False):
+    rng = np.random.default_rng(0)
+    field = rng.standard_normal(shape).astype(np.float32)
+    zeros = (0,) * len(shape)
+    one_step_hi = (0,) + tuple(n - 1 for n in shape)
+    warm_hi = (warm_steps - 1,) + tuple(n - 1 for n in shape)
+    rows = []
+    for bk in blocks_kb:
+        with fresh_stack() as (sv, st):
+            sink = InTransitSink(st.addr, InTransitConfig(
+                block_size=bk << 10, io_threads=2, tar_prefix="fig7"))
+            for s in range(warm_steps):          # queries need data to hit
+                sink.stage_array("field", field, step=s)
+            sink.flush()
+            stop = threading.Event()
+
+            def ingest():
+                for step in range(warm_steps, max_steps):
+                    if stop.is_set():
+                        return
+                    sink.stage_array("field", field, step=step)
+                    sink.flush(timeout=30)
+
+            t = threading.Thread(target=ingest, daemon=True)
+            t.start()
+            try:
+                with AnalysisSession(sv.addr) as an:
+                    queries = {
+                        "select_step": lambda: an.execute(
+                            tar("fig7_field").attr("v")
+                            .range((0,) + zeros, one_step_hi).select()),
+                        "select_warm": lambda: an.execute(
+                            tar("fig7_field").attr("v")
+                            .range((0,) + zeros, warm_hi).select()),
+                        "agg_mean": lambda: an.execute(
+                            tar("fig7_field").attr("v")
+                            .range((0,) + zeros, warm_hi).mean()),
+                        "agg_step_max": lambda: an.execute(
+                            tar("fig7_field").attr("v")
+                            .range((0,) + zeros, one_step_hi).max()),
+                    }
+                    for kind, fn in queries.items():
+                        times = [fn().elapsed_s for _ in range(trials)]
+                        m, ci = ci95(times)
+                        row = {"fig": "fig7", "block_kb": bk, "query": kind,
+                               "mean_us": round(m * 1e6, 1),
+                               "ci95_us": round(ci * 1e6, 1),
+                               "trials": trials,
+                               "subtars_at_measure":
+                                   an.server_stats().get("subtars"),
+                               "concurrent_ingest": t.is_alive()}
+                        rows.append(row)
+                        if not quiet:
+                            print(json.dumps(row), flush=True)
+            finally:
+                stop.set()
+                t.join(timeout=10)
+                sink.close()
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -11,7 +11,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig3_blocksize, fig4_threads, fig5_scaling,
-                            fig6_baselines, roofline)
+                            fig6_baselines, fig7_query_latency, roofline)
 
     print("name,us_per_call,derived")
     if args.full:
@@ -19,12 +19,15 @@ def main() -> None:
         fig4_threads.run(trials=5)
         fig5_scaling.run(sizes_mb=(32, 64, 128, 256), trials=5)
         fig6_baselines.run(n_files=16, file_mb=8, trials=5)
+        fig7_query_latency.run(trials=8)
     else:
         fig3_blocksize.run(n_clients=2, n_files=4, file_mb=4, trials=3,
                            blocks_kb=(256, 1024, 4096, 16384))
         fig4_threads.run(trials=3)
         fig5_scaling.run(sizes_mb=(8, 16, 32, 64), trials=3)
         fig6_baselines.run(n_files=8, file_mb=4, trials=3)
+        fig7_query_latency.run(blocks_kb=(1024, 16384), shape=(8, 32, 32),
+                               trials=4)
     roofline.run()
 
 

@@ -1,45 +1,77 @@
-"""Quickstart: the paper's Listing 1 in 30 lines, on the transport API.
+"""Quickstart: the paper's Listing 1 plus the typed analysis API.
 
-Starts an in-memory SAVIME, a staging server, ships a 3-D velocity field
-through the RDMA-emulated staging path via a TransferSession, and queries
-it back.
+Starts an in-memory SAVIME and a staging server, ships a 3-D velocity
+field through the RDMA-emulated staging path via a TransferSession, and
+reads it back through an AnalysisSession: a live ``watch()`` subscription
+sees the subtar land while the writer runs, then typed builder queries
+and a registered analyzer summarize the field.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--smoke]
+
+``--smoke`` shrinks the array for CI (loopback, ~1 MB).
 """
+import argparse
+
 import numpy as np
 
+from repro.analysis import AnalysisSession, CreateTar, LoadSubtar, analyzers, tar
 from repro.core import SavimeServer, StagingServer
+from repro.core.tars import Attribute, Dimension
 from repro.transport import TransferSession, TransportConfig
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--smoke", action="store_true", help="tiny arrays for CI")
+args = ap.parse_args()
+nx, ny = (41, 36) if args.smoke else (201, 126)
 
 savime = SavimeServer().start()
 staging = StagingServer(savime.addr, mem_capacity=1 << 30).start()
 
-# --- the paper's Listing 1, one session per compute job --------------------
 cfg = TransportConfig(staging_addr=staging.addr, io_threads=1,
-                      block_size=16 << 20)
-with TransferSession("rdma_staged", cfg) as st:
-    st.run_savime('create_tar(velocity, "x:0:200, y:0:125, z:0:125", '
-                  '"v:float64")')
-    v = np.random.default_rng(0).standard_normal((201, 126, 126))
-    fut = st.write("D", v)           # asynchronous: returns a future
-    st.sync()                        # block until writes reached staging
-    st.drain()                       # (benchmark hook: staging -> SAVIME done)
-    assert fut.done()
-    st.run_savime('load_subtar(velocity, D, "0,0,0", "201,126,126", v)')
-    # -----------------------------------------------------------------------
-
-    mean = st.run_savime("aggregate(velocity, v, mean)")
-    corner = st.run_savime('aggregate(velocity, v, max, "0,0,0", "10,10,10")')
-    print(f"mean(v) via SAVIME = {mean:.6f}   (numpy: {v.mean():.6f})")
-    print(f"max over [0:10]^3  = {corner:.6f} "
+                      block_size=4 << 20)
+with TransferSession("rdma_staged", cfg) as st, \
+        AnalysisSession(savime.addr) as an:
+    # --- the paper's Listing 1, typed ----------------------------------
+    an.execute(CreateTar("velocity",
+                         (Dimension("x", 0, nx - 1),
+                          Dimension("y", 0, ny - 1),
+                          Dimension("z", 0, ny - 1)),
+                         (Attribute("v", "float64"),)))
+    with an.watch("velocity", timeout=15.0, max_events=1) as sub:
+        v = np.random.default_rng(0).standard_normal((nx, ny, ny))
+        fut = st.write("D", v)           # asynchronous: returns a future
+        st.sync()                        # writes reached staging
+        st.drain()                       # staging -> SAVIME done
+        assert fut.done()
+        an.execute(LoadSubtar("velocity", "D", (0, 0, 0), (nx, ny, ny), "v"))
+        events = list(sub)               # the subscription saw it arrive
+        assert len(events) == 1 and events[0].tar == "velocity"
+        print(f"watch: subtar {events[0].origin}+{events[0].shape} "
+              f"arrived (seq {events[0].seq})")
+    # --- typed queries (fluent builder -> compiled in one place) -------
+    mean = an.execute(tar("velocity").attr("v").mean())
+    corner = an.execute(
+        tar("velocity").attr("v").range((0, 0, 0), (10, 10, 10)).max())
+    print(f"mean(v) via SAVIME = {mean.value:.6f}   (numpy: {v.mean():.6f})")
+    print(f"max over [0:10]^3  = {corner.value:.6f} "
           f"(numpy: {v[:11, :11, :11].max():.6f})")
-    assert np.isclose(mean, v.mean())
-    print("server:", {k: s for k, s in st.server_stats().items()
+    assert np.isclose(mean.value, v.mean())
+    assert np.isclose(corner.value, v[:11, :11, :11].max())
+    # --- a registered analyzer over a typed result ---------------------
+    rs = analyzers.create("running_stats")
+    rs.update(an.execute(tar("velocity").attr("v").select()))
+    s = rs.summary()
+    print(f"analyzer[{s.analyzer}]: mean={s['mean']:.4f} std={s['std']:.4f} "
+          f"count={s['count']}")
+    assert s["count"] == v.size
+    print("server:", {k: x for k, x in st.server_stats().items()
                       if k in ("datasets", "bytes_in", "registrations")})
 
-print(f"session: {st.stats.nbytes / 1e6:.1f} MB in "
+print(f"egress: {st.stats.nbytes / 1e6:.1f} MB in "
       f"{st.stats.to_staging_s:.3f}s to staging "
       f"({st.stats.staging_gbps:.2f} GB/s)")
+print(f"analysis: {an.stats.n_queries} queries, "
+      f"mean {an.stats.mean_query_s * 1e3:.2f} ms, kinds {an.stats.by_kind}")
 staging.stop()
 savime.stop()
 print("OK")

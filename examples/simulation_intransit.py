@@ -1,6 +1,11 @@
 """The paper's end-to-end scenario: a running simulation streams per-step
 fields through staging into SAVIME while an ANALYTICAL CLIENT concurrently
-queries past steps — analysis in transit, no files, no post-processing.
+consumes them — analysis in transit, no files, no post-processing.
+
+The analyst is *event-driven*: instead of polling with repeated full
+queries, it holds a live ``watch()`` subscription and reacts to each
+subtar-arrival event with a range query scoped to exactly the step that
+landed, feeding a registered ``window_reduce`` analyzer.
 
     PYTHONPATH=src python examples/simulation_intransit.py
 """
@@ -9,8 +14,9 @@ import time
 
 import numpy as np
 
-from repro.core import (InTransitConfig, InTransitSink, SavimeClient,
-                        SavimeServer, StagingServer)
+from repro.analysis import AnalysisSession, analyzers, tar
+from repro.core import (InTransitConfig, InTransitSink, SavimeServer,
+                        StagingServer)
 from repro.data import SeismicConfig, SeismicField
 
 N_STEPS = 12
@@ -30,21 +36,25 @@ stop = threading.Event()
 
 
 def analyst():
-    """Concurrent analytical app: tracks wavefront energy per step."""
-    cli = SavimeClient(savime.addr)
-    seen = -1
-    while not stop.is_set():
-        try:
-            box = cli.run("select(sim_velocity, v)")
-        except Exception:
-            time.sleep(0.1)
-            continue
-        if box.size and box.shape[0] - 1 > seen:
-            seen = box.shape[0] - 1
-            energy = float((box[seen] ** 2).sum())
-            analysis_rows.append((seen, energy))
-            print(f"  [analysis] step {seen}: field energy {energy:10.1f}")
-        time.sleep(0.1)
+    """Concurrent analytical app: wavefront energy per step, driven by
+    subtar-arrival events rather than polling."""
+    with AnalysisSession(savime.addr) as an:
+        energy_window = analyzers.create("window_reduce", window=4,
+                                         op="mean", step_op="sum")
+        with an.watch("sim_velocity") as sub:
+            while not stop.is_set():
+                ev = sub.poll(0.1)
+                if ev is None:
+                    continue
+                step = ev.origin[0]
+                box = an.execute(tar("sim_velocity").attr("v")
+                                 .range(ev.origin, ev.hi).select())
+                sq = box.array.astype(np.float64) ** 2
+                energy_window.update(sq)
+                analysis_rows.append((step, float(sq.sum())))
+                print(f"  [analysis] step {step}: field energy "
+                      f"{analysis_rows[-1][1]:10.1f} (4-step mean "
+                      f"{energy_window.summary()['value']:10.1f})")
 
 
 t = threading.Thread(target=analyst, daemon=True)
@@ -58,16 +68,17 @@ for step, field in sim.trial(N_STEPS):
     sink.flush(timeout=30)      # make it visible promptly for the demo
     print(f"[sim] step {step} produced + staged "
           f"({field.nbytes / 1e6:.1f} MB)")
+time.sleep(0.3)                 # let the last events drain to the analyst
 stop.set()
 t.join(timeout=2)
 
 dt = time.perf_counter() - t0
 # completeness: every staged step is queryable at the end
-cli = SavimeClient(savime.addr)
-final = cli.run("select(sim_velocity, v)")
+with AnalysisSession(savime.addr) as an:
+    final = an.execute(tar("sim_velocity").attr("v").select())
 print(f"\n{N_STEPS} steps, {sink.staged_bytes / 1e6:.1f} MB staged "
       f"in {dt:.2f}s ({sink.staged_bytes / dt / 1e6:.0f} MB/s); "
-      f"analysis observed {len(analysis_rows)} steps concurrently; "
+      f"analysis observed {len(analysis_rows)} arrival events live; "
       f"SAVIME holds {final.shape[0]} steps")
 assert final.shape[0] == N_STEPS
 assert len(analysis_rows) >= 1  # concurrency demonstrated (pacing-dependent)

@@ -15,10 +15,11 @@ import time
 import jax
 import numpy as np
 
+from repro.analysis import AnalysisSession, tar
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
-from repro.core import (InTransitConfig, InTransitSink, SavimeClient,
-                        SavimeServer, StagingServer)
+from repro.core import (InTransitConfig, InTransitSink, SavimeServer,
+                        StagingServer)
 from repro.data import DataConfig, SyntheticLM, device_put_batch
 from repro.launch.mesh import make_debug_mesh
 from repro.models import Model
@@ -88,8 +89,8 @@ assert losses[-1] < losses[0]
 assert sup.restarts == 1
 
 sink.flush()
-cli = SavimeClient(savime.addr)
-diag = cli.run("select(train_diag, v)")
+with AnalysisSession(savime.addr) as an:
+    diag = an.execute(tar("train_diag").attr("v").select()).array
 print(f"[analysis] SAVIME holds {diag.shape[0]} step diagnostics; "
       f"last staged loss={diag[-1, 0]:.3f}")
 sink.close()

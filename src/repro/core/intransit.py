@@ -25,6 +25,8 @@ from typing import Any, Optional
 
 import numpy as np
 
+from repro.analysis.query import CreateTar, LoadSubtar
+from repro.core.tars import Attribute, Dimension
 from repro.transport import TransferSession, TransportConfig
 
 MAX_STEPS = 1_000_000  # upper bound of the `step` dimension in DDL
@@ -80,7 +82,7 @@ class InTransitSink:
             straggler_timeout=cfg.straggler_timeout,
             max_inflight_bytes=cfg.max_inflight_bytes)).open()
         self._tars: set[str] = set()
-        self._pending: list[str] = []        # load_subtar DDL to run at flush
+        self._pending: list[LoadSubtar] = []  # typed DDL to run at flush
         self._lock = threading.Lock()
         self.staged_bytes = 0
         self.staged_arrays = 0
@@ -96,20 +98,22 @@ class InTransitSink:
                     quantized: bool) -> None:
         if tar in self._tars:
             return
+        step = Dimension("step", 0, MAX_STEPS)
         if quantized:  # quantized payloads are flat (block-padded) streams
             n = int(np.prod(shape))
             qlen = n + ((-n) % self.cfg.quant_block)
-            dims = f"step:0:{MAX_STEPS}, i:0:{qlen - 1}"
-            attr = "v:int8"
+            dims = (step, Dimension("i", 0, qlen - 1))
+            attrs = (Attribute("v", "int8"),)
         else:
-            dims = ", ".join([f"step:0:{MAX_STEPS}"] +
-                             [f"d{i}:0:{n - 1}" for i, n in enumerate(shape)])
-            attr = f"v:{dtype}"
-        self.session.run_savime(f'create_tar({tar}, "{dims}", "{attr}")')
+            dims = (step,) + tuple(Dimension(f"d{i}", 0, n - 1)
+                                   for i, n in enumerate(shape))
+            attrs = (Attribute("v", dtype),)
+        self.session.run_savime(CreateTar(tar, dims, attrs))
         if quantized:
-            self.session.run_savime(
-                f'create_tar({tar}__scale, "step:0:{MAX_STEPS}, '
-                f'b:0:{MAX_STEPS}", "s:float32")')
+            self.session.run_savime(CreateTar(
+                f"{tar}__scale",
+                (step, Dimension("b", 0, MAX_STEPS)),
+                (Attribute("s", "float32"),)))
         self._tars.add(tar)
 
     def stage_array(self, name: str, arr: Any, step: int = 0) -> None:
@@ -120,26 +124,24 @@ class InTransitSink:
         quantized = self.cfg.quantize == "int8" and x.dtype.kind == "f"
         self._ensure_tar(tar, x.shape, str(x.dtype), quantized)
         ds_name = f"{tar}__{step}"
-        origin = ",".join(["%d" % step] + ["0"] * x.ndim)
-        shape = ",".join(["1"] + [str(n) for n in x.shape])
         if quantized:
             q, scale = quantize_int8_np(x, self.cfg.quant_block)
             self.session.write(ds_name, q, dtype="int8")
             self.session.write(ds_name + "s", scale, dtype="float32")
             with self._lock:
-                self._pending.append(
-                    f'load_subtar({tar}, {ds_name}, "{step},0", '
-                    f'"1,{q.size}", v)')
-                self._pending.append(
-                    f'load_subtar({tar}__scale, {ds_name}s, '
-                    f'"{step},0", "1,{scale.size}", s)')
+                self._pending.append(LoadSubtar(
+                    tar, ds_name, (step, 0), (1, q.size), "v"))
+                self._pending.append(LoadSubtar(
+                    f"{tar}__scale", ds_name + "s",
+                    (step, 0), (1, scale.size), "s"))
             self.staged_bytes += q.nbytes + scale.nbytes
         else:
             self.session.write(ds_name, np.ascontiguousarray(x),
                                dtype=str(x.dtype))
             with self._lock:
-                self._pending.append(
-                    f'load_subtar({tar}, {ds_name}, "{origin}", "{shape}", v)')
+                self._pending.append(LoadSubtar(
+                    tar, ds_name, (step,) + (0,) * x.ndim,
+                    (1,) + x.shape, "v"))
             self.staged_bytes += x.nbytes
         self.staged_arrays += 1
 

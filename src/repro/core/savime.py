@@ -19,10 +19,13 @@ The mini query language mirrors the paper's Listing 1 usage:
 """
 from __future__ import annotations
 
+import queue
 import re
+import select
 import socket
 import threading
-from typing import Any, Optional
+import time
+from typing import Any, Callable, Optional
 
 import numpy as np
 
@@ -54,8 +57,28 @@ class SavimeEngine:
         self.tars: dict[str, TAR] = {}
         self.datasets: dict[str, np.ndarray] = {}
         self._lock = threading.RLock()
+        self._listeners: list[Callable[[dict], None]] = []
         self.stats = {"bytes_ingested": 0, "datasets": 0, "queries": 0,
                       "subtars": 0}
+
+    # -- subtar-arrival listeners (feed the subscribe/notify push path) ----
+    def add_listener(self, fn: Callable[[dict], None]) -> None:
+        with self._lock:
+            self._listeners.append(fn)
+
+    def remove_listener(self, fn: Callable[[dict], None]) -> None:
+        with self._lock:
+            if fn in self._listeners:
+                self._listeners.remove(fn)
+
+    def _notify(self, event: dict) -> None:
+        with self._lock:
+            listeners = list(self._listeners)
+        for fn in listeners:
+            try:
+                fn(event)
+            except Exception:  # noqa: BLE001 — listeners must not break ingest
+                pass
 
     # -- dataset ingestion (binary path) -----------------------------------
     def load_dataset(self, name: str, dtype: str, payload) -> None:
@@ -100,6 +123,8 @@ class SavimeEngine:
         s = tuple(int(x) for x in shape.split(","))
         t.load_subtar(o, s, {attr: arr})
         self.stats["subtars"] += 1
+        self._notify({"tar": tar, "origin": list(o), "shape": list(s),
+                      "attr": attr, "seq": self.stats["subtars"]})
         return "ok"
 
     def _q_select(self, tar: str, attr: str, lo: str = "", hi: str = ""):
@@ -132,7 +157,15 @@ class SavimeEngine:
 
 
 class SavimeServer:
-    """TCP front-end. Ops: query | load_dataset | stats | ping."""
+    """TCP front-end. Ops: query | load_dataset | subscribe | stats | ping.
+
+    ``subscribe`` turns a connection into a push channel: the server acks
+    ``{ok, seq}`` and then sends one ``{op: "notify", tar, origin, shape,
+    attr, seq}`` frame per subtar loaded into the watched TAR (name match;
+    ``""`` matches all, a trailing ``*`` matches by prefix) until the
+    client closes the socket — the paper's query-while-running goal (§6)
+    without analytical clients polling ``select``.
+    """
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0):
         self.engine = SavimeEngine()
@@ -143,6 +176,8 @@ class SavimeServer:
         self.addr = f"{host}:{self._srv.getsockname()[1]}"
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
+        self._conns: set[socket.socket] = set()
+        self._conn_lock = threading.Lock()
         self._accept_thread: Optional[threading.Thread] = None
 
     def start(self) -> "SavimeServer":
@@ -151,12 +186,34 @@ class SavimeServer:
         self._accept_thread.start()
         return self
 
-    def stop(self) -> None:
+    def stop(self, join_timeout: float = 2.0) -> None:
         self._stop.set()
+        try:
+            # shutdown (not just close) wakes a thread blocked in accept()
+            self._srv.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._srv.close()
         except OSError:
             pass
+        # unblock connection threads parked in recv, then join them
+        with self._conn_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(join_timeout)
+        deadline = time.monotonic() + join_timeout
+        for t in self._threads:
+            t.join(max(deadline - time.monotonic(), 0.0))
+        self._threads = [t for t in self._threads if t.is_alive()]
+
+    def live_threads(self) -> int:
+        return sum(t.is_alive() for t in self._threads)
 
     def _accept_loop(self) -> None:
         while not self._stop.is_set():
@@ -164,6 +221,9 @@ class SavimeServer:
                 conn, _ = self._srv.accept()
             except OSError:
                 return
+            # prune finished connection threads so a long-running server
+            # stays bounded by *live* connections, not total ever accepted
+            self._threads = [t for t in self._threads if t.is_alive()]
             t = threading.Thread(target=self._serve, args=(conn,),
                                  name="savime-conn", daemon=True)
             t.start()
@@ -171,20 +231,76 @@ class SavimeServer:
 
     def _serve(self, conn: socket.socket) -> None:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        with conn:
+        with self._conn_lock:
+            self._conns.add(conn)
+        try:
+            with conn:
+                while True:
+                    try:
+                        header, payload = wire.recv_frame(conn)
+                    except (ConnectionError, OSError):
+                        return
+                    if header.get("op") == "subscribe":
+                        self._serve_subscription(conn, header)
+                        return
+                    try:
+                        reply, data = self._handle(header, payload)
+                    except Exception as e:  # noqa: BLE001 — report to client
+                        reply, data = {"ok": False, "error": str(e)}, None
+                    try:
+                        wire.send_frame(conn, reply, data)
+                    except OSError:
+                        return
+        finally:
+            with self._conn_lock:
+                self._conns.discard(conn)
+
+    def _serve_subscription(self, conn: socket.socket, header) -> None:
+        """Push-mode connection: forward matching subtar events until the
+        subscriber (or the server) goes away."""
+        pattern = header.get("tar", "")
+        # bounded: a stalled subscriber must not grow server memory with
+        # ingest; drop-oldest keeps the most recent events for the reader
+        events: queue.Queue = queue.Queue(maxsize=1024)
+
+        def listener(ev: dict) -> None:
+            t = ev["tar"]
+            if not (not pattern or t == pattern or
+                    (pattern.endswith("*") and t.startswith(pattern[:-1]))):
+                return
             while True:
                 try:
-                    header, payload = wire.recv_frame(conn)
-                except (ConnectionError, OSError):
+                    events.put_nowait(ev)
                     return
+                except queue.Full:
+                    try:
+                        events.get_nowait()
+                    except queue.Empty:
+                        pass
+
+        self.engine.add_listener(listener)
+        try:
+            # a reader that stops draining must eventually free this
+            # thread: a stalled send times out and ends the subscription
+            conn.settimeout(30.0)
+            wire.send_frame(conn, {"ok": True, "tar": pattern,
+                                   "seq": self.engine.stats["subtars"]})
+            while not self._stop.is_set():
                 try:
-                    reply, data = self._handle(header, payload)
-                except Exception as e:  # noqa: BLE001 — report to client
-                    reply, data = {"ok": False, "error": str(e)}, None
-                try:
-                    wire.send_frame(conn, reply, data)
-                except OSError:
-                    return
+                    ev = events.get(timeout=0.25)
+                except queue.Empty:
+                    # no event to push — check for subscriber EOF, or an
+                    # idle disconnected watcher leaks this thread and its
+                    # engine listener until server stop
+                    r, _, _ = select.select([conn], [], [], 0)
+                    if r and not conn.recv(1, socket.MSG_PEEK):
+                        return
+                    continue
+                wire.send_frame(conn, {"op": "notify", "ok": True, **ev})
+        except OSError:
+            pass
+        finally:
+            self.engine.remove_listener(listener)
 
     def _handle(self, header, payload):
         op = header.get("op")
@@ -196,6 +312,9 @@ class SavimeServer:
         if op == "query":
             res = self.engine.run(header["q"])
             if isinstance(res, np.ndarray):
+                # range-filtered results may be strided views; memoryview
+                # cast("B") requires C-contiguity
+                res = np.ascontiguousarray(res)
                 return {"ok": True, "dtype": str(res.dtype),
                         "shape": list(res.shape)}, memoryview(res).cast("B")
             return {"ok": True, "result": res}, None
@@ -212,7 +331,12 @@ class SavimeClient:
         self._sock = wire.connect(addr)
         self._lock = threading.Lock()
 
-    def run(self, q: str):
+    def run(self, q):
+        """Run one operator. ``q`` may be a typed statement from
+        :mod:`repro.analysis.query` (preferred) or raw mini-language text
+        (deprecated as a user API — kept as wire plumbing; DESIGN.md §8)."""
+        if hasattr(q, "compile"):
+            q = q.compile()
         with self._lock:
             header, payload = wire.request(self._sock, {"op": "query", "q": q})
         if not header.get("ok"):

@@ -51,6 +51,9 @@ class StagingServer:
         self.mem_capacity = mem_capacity
         self._mem_used = 0
         self._alloc_lock = threading.Lock()
+        # _datasets is written by connection threads and popped by send
+        # threads — every mutation goes through _ds_lock
+        self._ds_lock = threading.Lock()
         self._datasets: dict[str, _Dataset] = {}
         self._send_pool = FCFSPool(send_threads, "staging-send",
                                    straggler_timeout=straggler_timeout)
@@ -65,6 +68,9 @@ class StagingServer:
         self._srv.listen(128)
         self.addr = f"{host}:{self._srv.getsockname()[1]}"
         self._stop = threading.Event()
+        self._threads: list[threading.Thread] = []
+        self._conns: set[socket.socket] = set()
+        self._conn_lock = threading.Lock()
         self._accept_thread: Optional[threading.Thread] = None
 
     # ------------------------------------------------------------------
@@ -74,15 +80,38 @@ class StagingServer:
         self._accept_thread.start()
         return self
 
-    def stop(self) -> None:
+    def stop(self, join_timeout: float = 2.0) -> None:
         self._stop.set()
         self._send_pool.stop()
+        try:
+            # shutdown (not just close) wakes a thread blocked in accept()
+            self._srv.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._srv.close()
         except OSError:
             pass
-        for ds in list(self._datasets.values()):
+        with self._conn_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        if self._accept_thread is not None:
+            self._accept_thread.join(join_timeout)
+        deadline = time.monotonic() + join_timeout
+        for t in self._threads:
+            t.join(max(deadline - time.monotonic(), 0.0))
+        self._threads = [t for t in self._threads if t.is_alive()]
+        with self._ds_lock:
+            datasets = list(self._datasets.values())
+        for ds in datasets:
             ds.region.close(unlink=True)
+
+    def live_threads(self) -> int:
+        return sum(t.is_alive() for t in self._threads)
 
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until the send queue is empty (staging→SAVIME finished)."""
@@ -102,25 +131,34 @@ class StagingServer:
                 conn, _ = self._srv.accept()
             except OSError:
                 return
-            threading.Thread(target=self._serve, args=(conn,),
-                             name="staging-conn", daemon=True).start()
+            self._threads = [t for t in self._threads if t.is_alive()]
+            t = threading.Thread(target=self._serve, args=(conn,),
+                                 name="staging-conn", daemon=True)
+            t.start()
+            self._threads.append(t)
 
     def _serve(self, conn: socket.socket) -> None:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        with conn:
-            while True:
-                try:
-                    header, payload = wire.recv_frame(conn)
-                except (ConnectionError, OSError):
-                    return
-                try:
-                    reply = self._handle(header, payload)
-                except Exception as e:  # noqa: BLE001
-                    reply = {"ok": False, "error": str(e)}
-                try:
-                    wire.send_frame(conn, reply)
-                except OSError:
-                    return
+        with self._conn_lock:
+            self._conns.add(conn)
+        try:
+            with conn:
+                while True:
+                    try:
+                        header, payload = wire.recv_frame(conn)
+                    except (ConnectionError, OSError):
+                        return
+                    try:
+                        reply = self._handle(header, payload)
+                    except Exception as e:  # noqa: BLE001
+                        reply = {"ok": False, "error": str(e)}
+                    try:
+                        wire.send_frame(conn, reply)
+                    except OSError:
+                        return
+        finally:
+            with self._conn_lock:
+                self._conns.discard(conn)
 
     # ------------------------------------------------------------------
     def _handle(self, h: dict, payload) -> dict:
@@ -158,21 +196,32 @@ class StagingServer:
         file_id = secrets.token_hex(8)
         base = self.mem_dir if in_memory else self.disk_dir
         path = os.path.join(base, file_id)
-        region = MemoryRegion(path, nbytes, create=True)
+        try:
+            region = MemoryRegion(path, nbytes, create=True)
+        except BaseException:
+            # mmap/ftruncate can fail after the capacity reservation was
+            # taken; without the rollback the bytes leak until restart
+            if in_memory:
+                with self._alloc_lock:
+                    self._mem_used -= nbytes
+            raise
         ds = _Dataset(file_id, h["name"], h.get("dtype", "uint8"), nbytes,
                       region, in_memory)
-        self._datasets[file_id] = ds
+        with self._ds_lock:
+            self._datasets[file_id] = ds
         return {"ok": True, "file_id": file_id, "path": path,
                 "in_memory": in_memory}
 
     def _op_reg_block(self, h: dict) -> dict:
-        ds = self._datasets[h["file_id"]]
+        with self._ds_lock:
+            ds = self._datasets[h["file_id"]]
         grant = ds.region.register_block(int(h["offset"]), int(h["size"]))
         self.stats["registrations"] += 1
         return {"ok": True, **grant}
 
     def _op_client_sync(self, h: dict) -> dict:
-        ds = self._datasets[h["file_id"]]
+        with self._ds_lock:
+            ds = self._datasets[h["file_id"]]
         ds.received_at = time.perf_counter()
         ds.region.deregister_all()   # paper: undo registration after sync
         self.stats["datasets"] += 1
@@ -193,7 +242,8 @@ class StagingServer:
             raise
         self.stats["bytes_to_savime"] += ds.nbytes
         ds.region.close(unlink=True)  # release tmpfs memory (paper §3.2)
-        self._datasets.pop(ds.file_id, None)
+        with self._ds_lock:
+            self._datasets.pop(ds.file_id, None)
         if ds.in_memory:
             with self._alloc_lock:
                 self._mem_used -= ds.nbytes

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import transport
+from repro import analysis, transport
 from repro.configs import get_config
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.models import Model
@@ -44,7 +44,13 @@ def main() -> None:
     ap.add_argument("--transport", default="rdma_staged",
                     choices=transport.available(),
                     help="egress engine for the in-transit sink")
+    ap.add_argument("--analyzer", default=None,
+                    choices=analysis.analyzers.available(),
+                    help="summarize staged decode latencies with a "
+                         "registered analyzer (needs --intransit)")
     args = ap.parse_args()
+    if args.analyzer and not args.intransit:
+        ap.error("--analyzer requires --intransit")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -110,6 +116,16 @@ def main() -> None:
           f"({B * 1e3 / np.mean(lat_ms):.1f} tok/s aggregate)")
     print(f"[serve] sample (req 0): {gen[0, :16].tolist()}")
     if sink is not None:
+        sink.flush()
+        if args.analyzer:
+            with analysis.AnalysisSession(savime.addr) as an:
+                res = an.execute(
+                    analysis.tar("serve_decode_ms").attr("v").select())
+                a = analysis.analyzers.create(args.analyzer)
+                a.update(res)
+                s = a.summary()
+                print(f"[serve] analyzer[{s.analyzer}] over "
+                      f"{res.shape} staged latencies: {s.payload}")
         sink.close()
         staging.stop()
         savime.stop()

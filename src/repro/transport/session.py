@@ -186,9 +186,22 @@ class TransferSession:
         self._emit("drain")
 
     # -- control plane --------------------------------------------------
-    def run_savime(self, q: str):
+    def run_savime(self, q):
+        """Run one analytical operator over this transport's control path.
+        ``q`` may be a typed statement from :mod:`repro.analysis.query`
+        (preferred) or raw mini-language text (deprecated as a user API —
+        DESIGN.md §8)."""
         self._check_live()
+        if hasattr(q, "compile"):
+            q = q.compile()
         return self.transport.run_savime(q)
+
+    def analysis(self, **kw) -> "object":
+        """Open a typed :class:`~repro.analysis.AnalysisSession` riding
+        this session's control path (compute nodes reach SAVIME only
+        through staging — paper §3.1)."""
+        from repro.analysis import AnalysisSession  # local: avoids cycle
+        return AnalysisSession(via=self, **kw).open()
 
     def server_stats(self) -> dict:
         self._check_live()

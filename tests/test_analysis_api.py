@@ -1,0 +1,373 @@
+"""Analysis-API tests: builder→mini-language golden strings, analyzer
+registry round-trip and built-in correctness, AnalysisSession typed
+results (direct and via the staging proxy), watch() under concurrent
+ingest, the non-contiguous wire reply fix, the staging reservation
+rollback, and server thread-hygiene soak checks."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro import analysis
+from repro.analysis import (AnalysisSession, Subscription, analyzers, tar)
+from repro.analysis.query import (Aggregate, CreateTar, DropTar, LoadSubtar,
+                                  Select, Window)
+from repro.core import SavimeClient, SavimeServer, StagingServer
+from repro.core.savime import SavimeEngine, SavimeError
+from repro.core.tars import Attribute, Dimension
+from repro.transport import TransferSession, TransportConfig
+
+
+@pytest.fixture()
+def savime():
+    srv = SavimeServer().start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture()
+def staging(savime):
+    srv = StagingServer(savime.addr, mem_capacity=64 << 20,
+                        send_threads=2).start()
+    yield srv
+    srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# typed query layer: golden strings + engine round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_builder_compiles_listing1_strings():
+    ct = CreateTar("velocity", (Dimension("x", 0, 200),
+                                Dimension("y", 0, 500),
+                                Dimension("z", 0, 500)),
+                   (Attribute("v", "float64"),))
+    assert ct.compile() == \
+        'create_tar(velocity, "x:0:200, y:0:500, z:0:500", "v:float64")'
+    ls = LoadSubtar("velocity", "D", (0, 0, 0), (201, 501, 501), "v")
+    assert ls.compile() == \
+        'load_subtar(velocity, D, "0,0,0", "201,501,501", v)'
+    sel = tar("velocity").attr("v").range((0, 0, 0), (10, 10, 10)).select()
+    assert sel.compile() == 'select(velocity, v, "0,0,0", "10,10,10")'
+    assert tar("velocity").attr("v").select().compile() == \
+        "select(velocity, v)"
+    assert tar("velocity").attr("v").mean().compile() == \
+        "aggregate(velocity, v, mean)"
+    bounded = tar("velocity").attr("v").range((0, 0, 0), (10, 10, 10)).max()
+    assert bounded.compile() == \
+        'aggregate(velocity, v, max, "0,0,0", "10,10,10")'
+    assert DropTar("velocity").compile() == "drop_tar(velocity)"
+
+
+def test_builder_dimension_mapping_function():
+    ct = CreateTar("t", (Dimension("x", 0, 9, offset=1.5, stride=0.5),),
+                   (Attribute("v", "float32"),))
+    assert ct.compile() == 'create_tar(t, "x:0:9:1.5:0.5", "v:float32")'
+
+
+def test_builder_validation():
+    with pytest.raises(ValueError):
+        tar("t").select()                       # missing .attr()
+    with pytest.raises(ValueError):
+        tar("t").attr("v").aggregate("median")  # unknown op
+    with pytest.raises(ValueError):
+        Select("t", "v", lo=(0, 0), hi=None)    # half-open box
+    with pytest.raises(ValueError):
+        Aggregate("t", "v", "mean", lo=(0,), hi=(1, 2))  # rank mismatch
+    with pytest.raises(ValueError):
+        LoadSubtar("t", "D", (0,), (1, 2), "v")
+    with pytest.raises(ValueError):
+        tar("t").attr("v").window(size=0)
+
+
+def test_compiled_statements_roundtrip_through_engine():
+    eng = SavimeEngine()
+    eng.run(CreateTar("t", (Dimension("x", 0, 7),),
+                      (Attribute("v", "float64"),)).compile())
+    eng.load_dataset("D", "float64", np.arange(8.0).tobytes())
+    eng.run(LoadSubtar("t", "D", (0,), (8,), "v").compile())
+    out = eng.run(tar("t").attr("v").range((2,), (5,)).select().compile())
+    np.testing.assert_array_equal(out, np.arange(2.0, 6.0))
+    assert eng.run(tar("t").attr("v").sum().compile()) == 28.0
+
+
+def test_window_statement_reduces_client_side():
+    w = tar("t").attr("v").window(size=2, op="mean")
+    assert w.compile() == "select(t, v)"       # no window op on the wire
+    arr = np.arange(12.0).reshape(4, 3)        # 4 steps of 3 values
+    out = w.finalize(arr)
+    np.testing.assert_array_equal(out, arr[-2:].mean(axis=0))
+
+
+# ---------------------------------------------------------------------------
+# analyzer registry + built-ins
+# ---------------------------------------------------------------------------
+
+
+def test_analyzer_registry_roundtrip():
+    names = analyzers.available()
+    for expected in ("running_stats", "histogram", "window_reduce"):
+        assert expected in names
+    a = analyzers.create("histogram", bins=4)
+    assert a.name == "histogram"
+    assert analyzers.get("histogram") is type(a)
+
+
+def test_analyzer_unknown_name_error():
+    with pytest.raises(analysis.UnknownAnalyzerError) as ei:
+        analyzers.create("crystal_ball")
+    msg = str(ei.value)
+    assert "crystal_ball" in msg and "running_stats" in msg
+
+
+def test_analyzer_duplicate_registration_rejected():
+    with pytest.raises(ValueError):
+        @analyzers.register_analyzer("running_stats")
+        class Impostor(analyzers.Analyzer):  # pragma: no cover
+            def _consume(self, arr): ...
+            def summary(self): ...
+
+
+def test_running_stats_matches_numpy():
+    rng = np.random.default_rng(1)
+    batches = [rng.standard_normal(100) for _ in range(3)]
+    a = analyzers.create("running_stats")
+    for b in batches:
+        a.update(b)
+    s = a.summary()
+    allv = np.concatenate(batches)
+    assert s.n_updates == 3 and s["count"] == allv.size
+    assert np.isclose(s["mean"], allv.mean())
+    assert np.isclose(s["std"], allv.std())
+    assert np.isclose(s["min"], allv.min())
+    assert np.isclose(s["max"], allv.max())
+
+
+def test_histogram_rejects_half_specified_range():
+    with pytest.raises(ValueError):
+        analyzers.create("histogram", lo=0.0)        # hi missing
+    with pytest.raises(ValueError):
+        analyzers.create("histogram", lo=1.0, hi=1.0)  # empty range
+
+
+def test_histogram_counts_everything():
+    a = analyzers.create("histogram", bins=8, lo=0.0, hi=1.0)
+    a.update(np.linspace(0, 1, 64))
+    a.update(np.array([-5.0, 5.0]))            # out of range -> edge bins
+    s = a.summary()
+    assert s["total"] == 66 and sum(s["counts"]) == 66
+    assert len(s["edges"]) == 9
+
+
+def test_window_reduce_keeps_trailing_window():
+    a = analyzers.create("window_reduce", window=3, op="mean", step_op="sum")
+    for step in range(6):
+        a.update(np.full(4, float(step)))      # per-step sum = 4*step
+    s = a.summary()
+    assert s["series"] == [12.0, 16.0, 20.0]   # steps 3, 4, 5
+    assert np.isclose(s["value"], 16.0)
+
+
+# ---------------------------------------------------------------------------
+# AnalysisSession
+# ---------------------------------------------------------------------------
+
+
+def _load(savime, name, arr):
+    cli = SavimeClient(savime.addr)
+    cli.load_dataset(name, str(arr.dtype), arr.tobytes())
+    cli.close()
+
+
+def test_session_typed_results_and_stats(savime):
+    v = np.arange(24.0).reshape(4, 6)
+    with AnalysisSession(savime.addr) as an:
+        an.execute(CreateTar("t", (Dimension("x", 0, 3),
+                                   Dimension("y", 0, 5)),
+                             (Attribute("v", "float64"),)))
+        _load(savime, "D", v)
+        an.execute(LoadSubtar("t", "D", (0, 0), (4, 6), "v"))
+        res = an.execute(tar("t").attr("v").select())
+        assert res.kind == "select"
+        assert res.dtype == "float64" and res.shape == (4, 6)
+        assert res.elapsed_s > 0
+        np.testing.assert_array_equal(res.array, v)
+        agg = an.execute(tar("t").attr("v").mean())
+        assert agg.scalar == v.mean() and agg.shape is None
+    assert an.stats.n_queries == 4
+    assert an.stats.by_kind == {"createtar": 1, "loadsubtar": 1,
+                                "select": 1, "aggregate": 1}
+    assert an.stats.result_bytes == v.nbytes
+    with pytest.raises(RuntimeError):          # closed
+        an.execute(tar("t").attr("v").mean())
+
+
+def test_session_requires_exactly_one_endpoint(savime):
+    with pytest.raises(ValueError):
+        AnalysisSession()
+    with pytest.raises(ValueError):
+        AnalysisSession(savime.addr, via=object())
+
+
+def test_session_semantic_errors_do_not_retry(savime):
+    with AnalysisSession(savime.addr, retries=2) as an:
+        with pytest.raises(SavimeError):
+            an.execute(tar("nope").attr("v").mean())
+    assert an.stats.n_retries == 0
+
+
+def test_session_via_transport_proxy(staging):
+    cfg = TransportConfig(staging_addr=staging.addr, io_threads=1)
+    with TransferSession("rdma_staged", cfg) as sess:
+        an = sess.analysis()
+        an.execute(CreateTar("p", (Dimension("i", 0, 63),),
+                             (Attribute("v", "float64"),)))
+        sess.write("P", np.full(64, 7.0))
+        sess.sync()
+        sess.drain()
+        an.execute(LoadSubtar("p", "P", (0,), (64,), "v"))
+        res = an.execute(tar("p").attr("v").max())
+        assert res.value == 7.0
+        with pytest.raises(RuntimeError):      # no push path behind proxy
+            an.watch("p")
+
+
+# ---------------------------------------------------------------------------
+# live subscription (subscribe/notify)
+# ---------------------------------------------------------------------------
+
+
+def test_watch_delivers_events_during_concurrent_ingest(savime, staging):
+    n = 3
+    with AnalysisSession(savime.addr) as an:
+        an.execute(CreateTar("w", (Dimension("step", 0, 100),
+                                   Dimension("i", 0, 63)),
+                             (Attribute("v", "float64"),)))
+        sub = an.watch("w", timeout=10.0, max_events=n)
+        done = threading.Event()
+
+        def ingest():
+            cfg = TransportConfig(staging_addr=staging.addr)
+            with TransferSession("rdma_staged", cfg) as s:
+                for i in range(n):
+                    s.write(f"w{i}", np.full(64, float(i)))
+                    s.sync()
+                    s.drain()
+                    s.run_savime(LoadSubtar("w", f"w{i}", (i, 0), (1, 64),
+                                            "v"))
+            done.set()
+
+        t = threading.Thread(target=ingest)
+        t.start()
+        events = list(sub)
+        t.join(timeout=10)
+        assert done.is_set()
+    assert [e.origin for e in events] == [(0, 0), (1, 0), (2, 0)]
+    assert all(e.shape == (1, 64) and e.attr == "v" for e in events)
+    assert [e.seq for e in events] == [1, 2, 3]
+    assert events[0].hi == (0, 63)
+
+
+def test_watch_name_filter_and_poll_timeout(savime):
+    v = np.ones(8)
+    with AnalysisSession(savime.addr) as an:
+        for name in ("a_one", "b_two"):
+            an.execute(CreateTar(name, (Dimension("i", 0, 7),),
+                                 (Attribute("v", "float64"),)))
+        with an.watch("a_*") as sub:           # prefix subscription
+            assert sub.poll(0.05) is None      # nothing yet
+            _load(savime, "da", v)
+            _load(savime, "db", v)
+            an.execute(LoadSubtar("b_two", "db", (0,), (8,), "v"))
+            an.execute(LoadSubtar("a_one", "da", (0,), (8,), "v"))
+            ev = sub.poll(5.0)
+            assert ev is not None and ev.tar == "a_one"
+            assert sub.poll(0.05) is None      # b_two was filtered out
+
+
+def test_subscription_survives_unmatched_tar(savime):
+    sub = Subscription(savime.addr, "never_loaded", timeout=0.1)
+    assert list(sub) == []                     # timeout -> clean end
+    sub.close()
+
+
+def test_idle_subscriber_disconnect_releases_listener_and_thread(savime):
+    import time
+    for _ in range(3):
+        sub = Subscription(savime.addr, "idle_tar")
+        sub.close()                            # disconnect with no events
+    deadline = time.monotonic() + 3.0
+    while time.monotonic() < deadline and \
+            (savime.engine._listeners or savime.live_threads()):
+        time.sleep(0.05)
+    assert savime.engine._listeners == []
+    assert savime.live_threads() == 0
+
+
+def test_only_idempotent_statements_marked_retryable():
+    assert Select("t", "v").idempotent
+    assert Aggregate("t", "v", "mean").idempotent
+    assert tar("t").attr("v").window().idempotent
+    assert DropTar("t").idempotent
+    assert not CreateTar("t", (), ()).idempotent
+    assert not LoadSubtar("t", "D", (0,), (1,), "v").idempotent
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes
+# ---------------------------------------------------------------------------
+
+
+def test_noncontiguous_query_reply_over_wire(savime):
+    base = np.arange(64.0).reshape(8, 8)
+    # range-filter ops can hand back strided views; emulate one directly
+    savime.engine._q_strided = lambda: base[::2, ::2]
+    cli = SavimeClient(savime.addr)
+    out = cli.run("strided()")
+    np.testing.assert_array_equal(out, base[::2, ::2])
+    cli.close()
+
+
+def test_write_req_reservation_rolls_back_on_failure(staging, monkeypatch):
+    import repro.core.staging as stg
+
+    def boom(path, nbytes, create=True):
+        raise OSError("mmap failed")
+
+    monkeypatch.setattr(stg, "MemoryRegion", boom)
+    before = staging._mem_used
+    with pytest.raises(OSError):
+        staging._op_write_req({"size": 4096, "name": "x"})
+    assert staging._mem_used == before
+    assert not staging._datasets
+
+
+def test_server_threads_stay_bounded_over_many_connections(savime, staging):
+    for i in range(40):
+        cli = SavimeClient(savime.addr)
+        assert cli.run("list_tars()") == ""
+        cli.close()
+        import repro.core.wire as wire
+        s = wire.connect(staging.addr)
+        wire.request(s, {"op": "ping"})
+        s.close()
+    # one more accept triggers pruning of the finished 40
+    cli = SavimeClient(savime.addr)
+    cli.run("list_tars()")
+    s = __import__("repro.core.wire", fromlist=["connect"]).connect(
+        staging.addr)
+    assert len(savime._threads) < 10
+    assert len(staging._threads) < 10
+    cli.close()
+    s.close()
+
+
+def test_server_stop_joins_connection_threads(savime):
+    clis = [SavimeClient(savime.addr) for _ in range(4)]
+    for c in clis:
+        c.run("list_tars()")
+    savime.stop()
+    assert savime.live_threads() == 0
+    for c in clis:
+        c.close()
