@@ -11,7 +11,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (fig3_blocksize, fig4_threads, fig5_scaling,
-                            fig6_baselines, fig7_query_latency, roofline)
+                            fig6_baselines, fig7_query_latency,
+                            fig8_striping, roofline)
 
     print("name,us_per_call,derived")
     if args.full:
@@ -20,6 +21,7 @@ def main() -> None:
         fig5_scaling.run(sizes_mb=(32, 64, 128, 256), trials=5)
         fig6_baselines.run(n_files=16, file_mb=8, trials=5)
         fig7_query_latency.run(trials=8)
+        fig8_striping.run(n_files=2, file_mb=32, trials=5)
     else:
         fig3_blocksize.run(n_clients=2, n_files=4, file_mb=4, trials=3,
                            blocks_kb=(256, 1024, 4096, 16384))
@@ -28,6 +30,8 @@ def main() -> None:
         fig6_baselines.run(n_files=8, file_mb=4, trials=3)
         fig7_query_latency.run(blocks_kb=(1024, 16384), shape=(8, 32, 32),
                                trials=4)
+        fig8_striping.run(n_files=2, file_mb=8, trials=3,
+                          blocks_kb=(1024, 4096), channels=(1, 2, 4))
     roofline.run()
 
 

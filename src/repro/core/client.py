@@ -16,6 +16,7 @@ low-level engine room the staged transport drives directly.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional, Union
 
 import numpy as np
@@ -29,15 +30,36 @@ Buf = Union[np.ndarray, bytes, bytearray, memoryview]
 
 
 class Communicator:
-    """Manages the task queue + I/O thread pool (not user-facing)."""
+    """Manages the task queue + I/O thread pool (not user-facing).
+
+    With ``n_channels > 1`` each dataset is striped across a shared
+    :class:`~repro.transport.channels.ChannelGroup` (concurrent
+    connections + credit-based flow control) instead of the single
+    per-thread connection; the FCFS queue/sync semantics are unchanged —
+    only the per-dataset data plane widens.
+    """
 
     def __init__(self, addr: str, io_threads: int, block_size: int,
-                 straggler_timeout: Optional[float] = None):
+                 straggler_timeout: Optional[float] = None,
+                 n_channels: int = 1, stripe_bytes: Optional[int] = None,
+                 credits: int = 4):
         self.addr = addr
         self.block_size = block_size
-        self._pool = FCFSPool(io_threads, "libstaging-io",
-                              straggler_timeout=straggler_timeout)
+        self._pool = None
         self._socks = wire.ConnCache()   # one conn (≈ RC QP) per I/O thread
+        self._channels = None
+        if n_channels > 1:
+            # striped mode bypasses the I/O pool entirely — don't start
+            # worker threads that would only ever idle
+            # (imported lazily: repro.transport imports this module)
+            from repro.transport.channels import ChannelGroup
+            self._channels = ChannelGroup(
+                addr, n_channels=n_channels,
+                stripe_bytes=stripe_bytes or block_size,
+                credits=credits).open()
+        else:
+            self._pool = FCFSPool(io_threads, "libstaging-io",
+                                  straggler_timeout=straggler_timeout)
 
     def _conn(self):
         return self._socks.get(self.addr)
@@ -72,15 +94,38 @@ class Communicator:
         return nbytes
 
     def submit(self, name: str, dtype: str, buf: np.ndarray) -> TaskHandle:
+        if self._channels is not None:
+            # striped mode bypasses the I/O pool entirely: stripes are
+            # enqueued onto the channels right away and datasets pipeline
+            # back-to-back (no per-dataset drain between transfers); the
+            # ack-driven completion feeds the same TaskHandle contract
+            h = TaskHandle(self._send, (name, dtype, buf),
+                           name=f"write-{name}")
+            h.started_at = time.perf_counter()
+            h.attempts = 1
+            tr = self._channels.submit_dataset(name, dtype, buf)
+            tr.add_done_callback(
+                lambda t, h=h: h.complete(result=t.nbytes)
+                if t.error is None else h.complete(error=t.error))
+            return h
         return self._pool.submit(self._send, name, dtype, buf,
                                  name=f"write-{name}")
 
     def sync(self, timeout: Optional[float] = None) -> None:
-        self._pool.sync(timeout)
+        if self._channels is not None:
+            self._channels.sync(timeout)
+        else:
+            self._pool.sync(timeout)
 
     def stop(self) -> None:
-        self._pool.stop()                # joins in-flight transfers first
+        if self._pool is not None:
+            self._pool.stop()            # joins in-flight transfers first
         self._socks.close_all()          # per-thread QPs die with the pool
+        if self._channels is not None:
+            self._channels.close()       # drains in-flight stripes first
+
+    def channel_stats(self) -> list[dict]:
+        return self._channels.channel_stats() if self._channels else []
 
 
 class StagingClient:
@@ -89,14 +134,18 @@ class StagingClient:
     def __init__(self, addr: str, io_threads: int = 1,
                  block_size: int = 64 << 20,
                  straggler_timeout: Optional[float] = None,
-                 max_inflight_bytes: Optional[int] = None):
+                 max_inflight_bytes: Optional[int] = None,
+                 n_channels: int = 1, stripe_bytes: Optional[int] = None,
+                 credits: int = 4):
         # imported lazily: repro.transport's engine modules import this
         # module for Communicator
         from repro.transport import TransferSession, TransportConfig
         self.session = TransferSession("rdma_staged", TransportConfig(
             staging_addr=addr, io_threads=io_threads, block_size=block_size,
             straggler_timeout=straggler_timeout,
-            max_inflight_bytes=max_inflight_bytes)).open()
+            max_inflight_bytes=max_inflight_bytes,
+            n_channels=n_channels, stripe_bytes=stripe_bytes,
+            credits=credits)).open()
 
     @property
     def comm(self) -> Communicator:

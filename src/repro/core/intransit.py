@@ -42,6 +42,9 @@ class InTransitConfig:
     straggler_timeout: Optional[float] = None
     transport: str = "rdma_staged"   # any registered transport name
     max_inflight_bytes: Optional[int] = None  # egress backpressure bound
+    n_channels: int = 1              # striped egress connections (1 = off)
+    stripe_bytes: Optional[int] = None  # stripe size (None = block_size)
+    credits: int = 4                 # per-channel credit window request
 
 
 def quantize_int8_np(x: np.ndarray, block: int) -> tuple[np.ndarray, np.ndarray]:
@@ -80,7 +83,9 @@ class InTransitSink:
             savime_addr=None if staged else addr,
             io_threads=cfg.io_threads, block_size=cfg.block_size,
             straggler_timeout=cfg.straggler_timeout,
-            max_inflight_bytes=cfg.max_inflight_bytes)).open()
+            max_inflight_bytes=cfg.max_inflight_bytes,
+            n_channels=cfg.n_channels, stripe_bytes=cfg.stripe_bytes,
+            credits=cfg.credits)).open()
         self._tars: set[str] = set()
         self._pending: list[LoadSubtar] = []  # typed DDL to run at flush
         self._lock = threading.Lock()

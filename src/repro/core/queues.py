@@ -12,6 +12,7 @@ transient link errors).
 """
 from __future__ import annotations
 
+import collections
 import threading
 import time
 import queue as _queue
@@ -76,7 +77,7 @@ class FCFSPool:
 
     def __init__(self, n_threads: int, name: str = "pool",
                  straggler_timeout: Optional[float] = None,
-                 max_retries: int = 2):
+                 max_retries: int = 2, completed_cap: int = 512):
         self.name = name
         self.straggler_timeout = straggler_timeout
         self.max_retries = max_retries
@@ -87,7 +88,15 @@ class FCFSPool:
         self._pending_lock = threading.Condition()
         self._stop = threading.Event()
         self._stop_callbacks: list[Callable[[], None]] = []
-        self.completed: list[TaskHandle] = []
+        # bounded history: long-running servers complete millions of tasks —
+        # keep aggregate latency stats plus a capped ring of recent handles
+        # (each handle pins its fn/args, so an unbounded list leaks memory)
+        self.completed: collections.deque = collections.deque(
+            maxlen=completed_cap)
+        self.n_completed = 0
+        self.n_failed = 0
+        self._lat_sum = 0.0
+        self._lat_count = 0
         self._threads = [
             threading.Thread(target=self._worker, name=f"{name}-{i}",
                              daemon=True)
@@ -108,6 +117,11 @@ class FCFSPool:
             self._pending += 1
         self._q.put(h)
         return h
+
+    def pending(self) -> int:
+        """Tasks submitted but not yet completed (queued + in flight)."""
+        with self._pending_lock:
+            return self._pending
 
     def sync(self, timeout: Optional[float] = None) -> None:
         """Block until every submitted task completed (paper's st.sync())."""
@@ -168,7 +182,11 @@ class FCFSPool:
                 res = h.fn(*h.args)
                 first = h.complete(result=res)
             except BaseException as e:  # noqa: BLE001 — retried below
-                if h.attempts <= self.max_retries and not h.done.is_set():
+                # no retry once stop() was called: the re-enqueued task
+                # would sit behind the shutdown sentinels forever, leaving
+                # _pending stuck and hanging every later sync()
+                if h.attempts <= self.max_retries and not h.done.is_set() \
+                        and not self._stop.is_set():
                     self._q.put(h)          # bounded retry
                     first = False
                 else:
@@ -180,6 +198,13 @@ class FCFSPool:
             if first:
                 self.completed.append(h)
                 with self._pending_lock:
+                    self.n_completed += 1
+                    if h.error is not None:
+                        self.n_failed += 1
+                    lat = h.latency
+                    if lat is not None:
+                        self._lat_sum += lat
+                        self._lat_count += 1
                     self._pending -= 1
                     self._pending_lock.notify_all()
 
@@ -198,4 +223,16 @@ class FCFSPool:
 
     # -- stats ----------------------------------------------------------------
     def latencies(self) -> list[float]:
-        return [h.latency for h in self.completed if h.latency is not None]
+        """Latencies of the most recent completions (capped ring)."""
+        return [h.latency for h in list(self.completed)
+                if h.latency is not None]
+
+    def latency_stats(self) -> dict:
+        """Aggregate latency counters over *all* completions (unbounded
+        count, bounded memory — the ring only keeps recent handles)."""
+        with self._pending_lock:
+            return {"count": self._lat_count,
+                    "total_s": self._lat_sum,
+                    "mean_s": self._lat_sum / self._lat_count
+                    if self._lat_count else 0.0,
+                    "failed": self.n_failed}

@@ -6,9 +6,20 @@ fallback), then forwards them to SAVIME in the background over TCP with
 sendfile/splice, FCFS, from a pool of send threads. In-memory files are
 unlinked after ingest to release memory (paper §3.2). Also proxies SAVIME
 control commands for clients that cannot reach the analytical network.
+
+Striped ingest (DESIGN.md §9): ``stripe_open`` allocates the region and
+declares ``n_stripes``; each ``stripe`` frame carries ``(name,
+stripe_idx, n_stripes, offset)`` and its payload is received *directly
+into the mmap'd region at its offset* — stripes reassemble out of order,
+from any number of concurrent channel connections, with one copy (same
+per-byte cost as the one-sided RDMA path). Every stripe ack returns a
+credit grant computed from current memory pressure: when the SAVIME hop
+is slow and tmpfs fills, grants shrink toward 1 and senders stall
+instead of ballooning staging memory.
 """
 from __future__ import annotations
 
+import math
 import os
 import secrets
 import socket
@@ -32,6 +43,12 @@ class _Dataset:
         self.region = region
         self.in_memory = in_memory
         self.received_at: Optional[float] = None
+        # striped-ingest bookkeeping (None for the RDMA block path)
+        self.n_stripes: Optional[int] = None
+        self.stripes_seen: set[int] = set()
+        self.credits_wanted: int = 4
+        self.finished = False
+        self.last_stripe_at: float = 0.0
 
 
 class StagingServer:
@@ -41,7 +58,8 @@ class StagingServer:
                  disk_dir: Optional[str] = None,
                  send_threads: int = 2,
                  straggler_timeout: Optional[float] = None,
-                 auto_subtar: bool = True):
+                 auto_subtar: bool = True,
+                 stripe_ttl: float = 300.0):
         self.savime_addr = savime_addr
         uid = f"{os.getpid()}-{secrets.token_hex(3)}"
         self.mem_dir = mem_dir or f"/dev/shm/staging-{uid}"
@@ -59,8 +77,10 @@ class StagingServer:
                                    straggler_timeout=straggler_timeout)
         self._savime_local = threading.local()
         self.auto_subtar = auto_subtar
+        self.stripe_ttl = stripe_ttl
         self.stats = {"datasets": 0, "bytes_in": 0, "bytes_to_savime": 0,
-                      "disk_fallbacks": 0, "registrations": 0}
+                      "disk_fallbacks": 0, "registrations": 0,
+                      "stripes": 0, "stripe_dups": 0, "stripe_aborts": 0}
 
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -145,13 +165,34 @@ class StagingServer:
             with conn:
                 while True:
                     try:
-                        header, payload = wire.recv_frame(conn)
+                        header = wire.recv_header(conn)
+                        if header.get("op") == "stripe":
+                            # the stripe handler receives its own payload —
+                            # straight into the mmap'd region at its offset
+                            try:
+                                reply = self._op_stripe(conn, header)
+                            except (ConnectionError, OSError):
+                                raise
+                            except Exception as e:  # noqa: BLE001
+                                # post-validation failure (e.g. region
+                                # closed by stop() mid-stripe): report it,
+                                # then drop the conn — the payload may not
+                                # be fully consumed, so framing is gone
+                                try:
+                                    wire.send_frame(
+                                        conn,
+                                        {"ok": False, "error": str(e)})
+                                except OSError:
+                                    pass
+                                return
+                        else:
+                            payload = wire.recv_payload(conn, header)
+                            try:
+                                reply = self._handle(header, payload)
+                            except Exception as e:  # noqa: BLE001
+                                reply = {"ok": False, "error": str(e)}
                     except (ConnectionError, OSError):
                         return
-                    try:
-                        reply = self._handle(header, payload)
-                    except Exception as e:  # noqa: BLE001
-                        reply = {"ok": False, "error": str(e)}
                     try:
                         wire.send_frame(conn, reply)
                     except OSError:
@@ -171,6 +212,8 @@ class StagingServer:
             return self._op_reg_block(h)
         if op == "client_sync":
             return self._op_client_sync(h)
+        if op == "stripe_open":
+            return self._op_stripe_open(h)
         if op == "run_savime":
             res = self._savime().run(h["q"])
             if hasattr(res, "tolist"):
@@ -222,13 +265,127 @@ class StagingServer:
     def _op_client_sync(self, h: dict) -> dict:
         with self._ds_lock:
             ds = self._datasets[h["file_id"]]
+        self._finish_dataset(ds)
+        return {"ok": True}
+
+    def _finish_dataset(self, ds: _Dataset) -> None:
+        """Dataset fully received (block-path sync or last stripe): account
+        it and queue the staging→SAVIME forward."""
         ds.received_at = time.perf_counter()
         ds.region.deregister_all()   # paper: undo registration after sync
         self.stats["datasets"] += 1
         self.stats["bytes_in"] += ds.nbytes
         self._send_pool.submit(self._send_to_savime, ds,
                                name=f"send-{ds.name}")
-        return {"ok": True}
+
+    # -- striped ingest (DESIGN.md §9) -----------------------------------
+    def _op_stripe_open(self, h: dict) -> dict:
+        self._gc_stale_stripes()
+        rep = self._op_write_req(h)
+        n_stripes = int(h["n_stripes"])
+        with self._ds_lock:
+            ds = self._datasets[rep["file_id"]]
+            ds.n_stripes = n_stripes
+            ds.credits_wanted = max(1, int(h.get("credits", 4)))
+            ds.last_stripe_at = time.monotonic()
+        if n_stripes == 0:           # empty dataset: complete at open
+            with self._ds_lock:
+                ds.finished = True
+            self._finish_dataset(ds)
+        rep["credits"] = self._credit_grant(ds.credits_wanted)
+        return rep
+
+    def _op_stripe(self, conn: socket.socket, h: dict) -> dict:
+        """Receive one stripe payload directly into the dataset's region.
+
+        Any validation failure must still drain the payload bytes before
+        replying, or the connection's framing desynchronizes.
+        """
+        nbytes = int(h.get("nbytes") or 0)
+        try:
+            with self._ds_lock:
+                ds = self._datasets[h["file_id"]]
+                dup = int(h["stripe_idx"]) in ds.stripes_seen
+            idx = int(h["stripe_idx"])
+            off = int(h["offset"])
+            # one-sided stripes (sided=1) landed via a direct memory write;
+            # the frame is control-only and declares its extent in "size"
+            if h.get("sided"):
+                if nbytes:
+                    raise ValueError("sided stripe must not carry payload")
+                span = int(h.get("size") or 0)
+            else:
+                span = nbytes
+            if ds.n_stripes is None:
+                raise ValueError("dataset was not opened with stripe_open")
+            if off < 0 or off + span > ds.nbytes:
+                raise ValueError(
+                    f"stripe [{off},{off + span}) outside dataset "
+                    f"[0,{ds.nbytes})")
+        except (KeyError, ValueError, TypeError) as e:
+            wire.drain_payload(conn, h)       # keep the stream framed
+            return {"ok": False, "error": str(e)}
+        grant = self._credit_grant(ds.credits_wanted)
+        if dup:
+            # duplicate (retry / speculative re-send): ack idempotently,
+            # do not touch the region — it may already be forwarding
+            wire.drain_payload(conn, h)
+            self.stats["stripe_dups"] += 1
+            return {"ok": True, "stripe_idx": idx, "dup": True,
+                    "done": False, "credits": grant}
+        if nbytes:
+            wire.recv_into(conn, ds.region.view()[off:off + nbytes])
+        if span:
+            # on-demand registration per stripe (paper: "the server
+            # register each block as needed") — credit-granted rather than
+            # request/reply, so it pipelines with the writes instead of
+            # costing a serialized RTT + cold zero-fill pass per block
+            ds.region.register_block(off, span)
+            self.stats["registrations"] += 1
+        done = False
+        with self._ds_lock:
+            ds.stripes_seen.add(idx)
+            ds.last_stripe_at = time.monotonic()
+            if len(ds.stripes_seen) >= ds.n_stripes and not ds.finished:
+                ds.finished = done = True
+        self.stats["stripes"] += 1
+        if done:
+            self._finish_dataset(ds)
+        return {"ok": True, "stripe_idx": idx, "dup": False, "done": done,
+                "credits": grant}
+
+    def _gc_stale_stripes(self) -> None:
+        """Reap striped datasets abandoned mid-transfer (client or channel
+        died): without this their capacity reservation never releases, and
+        since credit grants derive from ``_mem_used`` a few dead transfers
+        would permanently throttle every healthy client. Activity-based:
+        a credit-stalled sender still trickles stripes (grants are never
+        0), so only truly dead transfers age past the TTL."""
+        now = time.monotonic()
+        with self._ds_lock:
+            stale = [ds for ds in self._datasets.values()
+                     if ds.n_stripes is not None and not ds.finished
+                     and now - ds.last_stripe_at > self.stripe_ttl]
+            for ds in stale:
+                self._datasets.pop(ds.file_id, None)
+        for ds in stale:
+            ds.region.close(unlink=True)
+            if ds.in_memory:
+                with self._alloc_lock:
+                    self._mem_used -= ds.nbytes
+            self.stats["stripe_aborts"] += 1
+
+    def _credit_grant(self, wanted: int) -> int:
+        """Per-channel window grant: full when tmpfs is empty, shrinking
+        toward 1 as it fills (a slow SAVIME hop keeps memory occupied, so
+        producers stall on credits instead of overrunning the staging
+        area). Never 0 — a zero grant with an empty pipeline would leave
+        no ack to ever raise it again."""
+        with self._alloc_lock:
+            used = self._mem_used
+        frac_free = 1.0 - used / self.mem_capacity if self.mem_capacity \
+            else 1.0
+        return max(1, min(wanted, math.ceil(wanted * max(frac_free, 0.0))))
 
     # -- background forward (FCFS pool) ---------------------------------
     def _send_to_savime(self, ds: _Dataset) -> None:

@@ -7,6 +7,11 @@ Frame = 8-byte big-endian header length | JSON header | raw payload
 this is the splice/sendfile zero-copy path the paper uses for the
 staging→SAVIME hop (§2: "SAVIME uses standard TCP for control operations
 combined with the splice syscall for sending data").
+
+Receive is split into ``recv_header`` / ``recv_payload`` /
+``recv_payload_into`` so servers can parse the header first and land the
+payload straight into its destination buffer (the striped staging path
+recv's into the mmap'd memory region — one copy, like the RDMA path).
 """
 from __future__ import annotations
 
@@ -18,6 +23,19 @@ from typing import Any, Optional
 
 _LEN = struct.Struct(">Q")
 CHUNK = 1 << 20
+
+# JSON headers are small dicts; a length prefix beyond this is a corrupt
+# or hostile stream, not a real frame — without the cap a bad 8-byte
+# prefix makes _recv_exact allocate gigabytes before failing.
+MAX_HEADER_LEN = 1 << 20
+# Payloads are bounded by staging capacity / block sizes in practice; a
+# declared size beyond this is corrupt, and the allocation would happen
+# before a single payload byte arrives.
+MAX_PAYLOAD_LEN = 8 << 30
+
+
+class ProtocolError(ConnectionError):
+    """The byte stream is not a valid frame (framing unrecoverable)."""
 
 
 def send_frame(sock: socket.socket, header: dict[str, Any],
@@ -31,11 +49,14 @@ def send_frame(sock: socket.socket, header: dict[str, Any],
 
 
 def send_frame_from_file(sock: socket.socket, header: dict[str, Any],
-                         fd: int, count: int, offset: int = 0) -> None:
+                         fd: int, count: int, offset: int = 0,
+                         timeout: float = 30.0) -> None:
     """Zero-copy payload path (os.sendfile == splice on Linux).
 
     Sockets with a timeout are internally non-blocking: sendfile raises
     EAGAIN when the send buffer fills — wait for writability and resume.
+    A peer that never drains makes writability never arrive; that is a
+    ``TimeoutError``, not a spin.
     """
     import select
     header = dict(header, nbytes=count)
@@ -46,7 +67,11 @@ def send_frame_from_file(sock: socket.socket, header: dict[str, Any],
         try:
             n = os.sendfile(sock.fileno(), fd, offset + sent, count - sent)
         except BlockingIOError:
-            select.select([], [sock], [], 30.0)
+            _, writable, _ = select.select([], [sock], [], timeout)
+            if not writable:
+                raise TimeoutError(
+                    f"sendfile: peer not writable for {timeout}s "
+                    f"({sent}/{count} bytes sent)") from None
             continue
         if n == 0:
             raise ConnectionError("sendfile: peer closed")
@@ -55,22 +80,62 @@ def send_frame_from_file(sock: socket.socket, header: dict[str, Any],
 
 def _recv_exact(sock: socket.socket, n: int) -> bytearray:
     buf = bytearray(n)
-    view = memoryview(buf)
-    got = 0
-    while got < n:
-        r = sock.recv_into(view[got:], min(n - got, CHUNK))
-        if r == 0:
-            raise ConnectionError("recv: peer closed")
-        got += r
+    recv_into(sock, buf)
     return buf
 
 
-def recv_frame(sock: socket.socket) -> tuple[dict[str, Any], bytearray]:
+def recv_into(sock: socket.socket, view) -> None:
+    """Receive exactly ``len(view)`` bytes into a writable buffer."""
+    mv = memoryview(view).cast("B")
+    n = len(mv)
+    got = 0
+    while got < n:
+        r = sock.recv_into(mv[got:], min(n - got, CHUNK))
+        if r == 0:
+            raise ConnectionError("recv: peer closed")
+        got += r
+
+
+def recv_header(sock: socket.socket) -> dict[str, Any]:
     hlen = _LEN.unpack(bytes(_recv_exact(sock, 8)))[0]
-    header = json.loads(bytes(_recv_exact(sock, hlen)))
-    payload = _recv_exact(sock, header.get("nbytes", 0)) \
-        if header.get("nbytes") else bytearray()
-    return header, payload
+    if hlen > MAX_HEADER_LEN:
+        raise ProtocolError(
+            f"frame header length {hlen} exceeds {MAX_HEADER_LEN} "
+            "(corrupt or hostile length prefix)")
+    return json.loads(bytes(_recv_exact(sock, hlen)))
+
+
+def recv_payload(sock: socket.socket, header: dict[str, Any]) -> bytearray:
+    n = int(header.get("nbytes") or 0)
+    if n > MAX_PAYLOAD_LEN:
+        raise ProtocolError(
+            f"frame payload length {n} exceeds {MAX_PAYLOAD_LEN} "
+            "(corrupt or hostile header)")
+    return _recv_exact(sock, n) if n else bytearray()
+
+
+def drain_payload(sock: socket.socket, header: dict[str, Any]) -> None:
+    """Consume and discard a frame's payload in bounded chunks — for
+    rejecting a frame whose declared size should not be trusted with a
+    single up-front allocation."""
+    n = int(header.get("nbytes") or 0)
+    if n > MAX_PAYLOAD_LEN:
+        raise ProtocolError(
+            f"frame payload length {n} exceeds {MAX_PAYLOAD_LEN} "
+            "(corrupt or hostile header)")
+    scratch = bytearray(min(n, CHUNK))
+    view = memoryview(scratch)
+    got = 0
+    while got < n:
+        r = sock.recv_into(view[:min(n - got, CHUNK)])
+        if r == 0:
+            raise ConnectionError("recv: peer closed")
+        got += r
+
+
+def recv_frame(sock: socket.socket) -> tuple[dict[str, Any], bytearray]:
+    header = recv_header(sock)
+    return header, recv_payload(sock, header)
 
 
 def request(sock: socket.socket, header: dict[str, Any],
@@ -87,12 +152,16 @@ def connect(addr: str, timeout: float = 30.0) -> socket.socket:
 
 
 class ConnCache:
-    """One cached connection per calling thread, all tracked for close.
+    """One cached connection per (calling thread, addr), tracked for close.
 
     The I/O pools want one connection per worker thread (≈ an RC QP, or
     an ssh session in the copy emulation); ``close_all`` is hooked to the
     owner's stop path so no connection outlives its pool.  ``factory``
     may build anything with a ``close()`` method (sockets, clients).
+
+    The per-thread cache is keyed by ``addr``: a thread that talks to two
+    endpoints gets two connections — it used to silently reuse whichever
+    connection it opened first, sending frames to the wrong server.
     """
 
     def __init__(self):
@@ -102,10 +171,12 @@ class ConnCache:
         self._lock = threading.Lock()
 
     def get(self, addr: str, factory=connect):
-        obj = getattr(self._local, "obj", None)
+        objs = getattr(self._local, "objs", None)
+        if objs is None:
+            objs = self._local.objs = {}
+        obj = objs.get(addr)
         if obj is None:
-            obj = factory(addr)
-            self._local.obj = obj
+            obj = objs[addr] = factory(addr)
             with self._lock:
                 self._all.append(obj)
         return obj

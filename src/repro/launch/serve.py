@@ -44,6 +44,9 @@ def main() -> None:
     ap.add_argument("--transport", default="rdma_staged",
                     choices=transport.available(),
                     help="egress engine for the in-transit sink")
+    ap.add_argument("--channels", type=int, default=1,
+                    help="stripe egress across N concurrent connections "
+                         "with credit-based flow control (1 = off)")
     ap.add_argument("--analyzer", default=None,
                     choices=analysis.analyzers.available(),
                     help="summarize staged decode latencies with a "
@@ -78,7 +81,8 @@ def main() -> None:
                      else savime.addr)
         sink = InTransitSink(sink_addr,
                              InTransitConfig(tar_prefix="serve",
-                                             transport=args.transport))
+                                             transport=args.transport,
+                                             n_channels=args.channels))
 
     key = jax.random.PRNGKey(2)
     with jax.set_mesh(mesh):

@@ -54,6 +54,9 @@ def main() -> None:
     ap.add_argument("--transport", default="rdma_staged",
                     choices=transport.available(),
                     help="egress engine for the in-transit sink")
+    ap.add_argument("--channels", type=int, default=1,
+                    help="stripe egress across N concurrent connections "
+                         "with credit-based flow control (1 = off)")
     ap.add_argument("--compress-pods", action="store_true")
     ap.add_argument("--egress", default="diag",
                     choices=["none", "diag", "grads_int8"])
@@ -82,9 +85,10 @@ def main() -> None:
         sink_addr = (staging.addr if args.transport == "rdma_staged"
                      else savime.addr)
         sink = InTransitSink(sink_addr, InTransitConfig(
-            io_threads=2, transport=args.transport))
-        print(f"[train] in-transit sink --{args.transport}--> "
-              f"SAVIME {savime.addr}")
+            io_threads=2, transport=args.transport,
+            n_channels=args.channels))
+        print(f"[train] in-transit sink --{args.transport}"
+              f"(x{args.channels} channels)--> SAVIME {savime.addr}")
 
     ckpt = CheckpointManager(args.ckpt_dir, sink=sink)
     sup = Supervisor(jax.jit(setup.step_fn(), donate_argnums=(0,)), ckpt,

@@ -16,5 +16,8 @@ from repro.transport.base import (  # noqa: F401
 from repro.transport.session import (  # noqa: F401
     DatasetFuture, TransferSession, run_engine,
 )
+from repro.transport.channels import (  # noqa: F401
+    ChannelGroup, ChannelStats,
+)
 from repro.transport import staged as _staged  # noqa: F401  (registers rdma_staged)
 from repro.transport import copyemu as _copyemu  # noqa: F401  (registers scp_*, ssh_direct)

@@ -44,6 +44,9 @@ class TransportConfig:
     disk_bw: Optional[float] = None       # B/s cap for scp_disk (paper HW)
     straggler_timeout: Optional[float] = None
     max_inflight_bytes: Optional[int] = None  # session backpressure bound
+    n_channels: int = 1                   # striped connections (1 = off)
+    stripe_bytes: Optional[int] = None    # stripe size (None = block_size)
+    credits: int = 4                      # per-channel credit window request
     extra: dict = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "TransportConfig":
@@ -67,6 +70,9 @@ class TransferStats:
     close_s: float = 0.0            # transport.close() wall time
     write_wait_s: float = 0.0       # time write() spent blocked (backpressure)
     peak_inflight_bytes: int = 0    # high-water mark of pinned bytes
+    # per-channel byte/latency breakdowns when the transport stripes over
+    # multiple connections (empty on single-connection paths)
+    channels: list = dataclasses.field(default_factory=list)
 
     @property
     def staging_gbps(self) -> float:
@@ -135,6 +141,11 @@ class Transport(abc.ABC):
     def server_stats(self) -> dict:
         """Remote-side counters, when the transport exposes them."""
         return {}
+
+    def channel_stats(self) -> list[dict]:
+        """Per-channel breakdowns when this transport stripes across
+        multiple connections (``cfg.n_channels > 1``); empty otherwise."""
+        return []
 
 
 # ---------------------------------------------------------------------------

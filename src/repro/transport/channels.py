@@ -1,0 +1,483 @@
+"""Striped multi-channel transfers with credit-based flow control.
+
+The paper's block-size experiment (§3–4) probes how transfer granularity
+amortizes per-block costs; this module adds the orthogonal axis the
+bandwidth-saturation regime needs: **parallelism across connections**
+(Catalyst-ADIOS2 stripes in-transit traffic across concurrent streams;
+SDN-for-Big-Data shows multi-path transfer as the scaling lever).
+
+    ChannelGroup(addr, n_channels=4, stripe_bytes=4 << 20, credits=4)
+
+splits each dataset into stripes round-robined across N concurrent
+connections. Per channel the sender pipelines up to ``window`` unacked
+stripes; every ack replenishes one credit and carries the receiver's new
+grant, so a receiver under pressure (staging memory filling because the
+SAVIME hop is slow) shrinks the window toward 1 and the producers slow
+down instead of ballooning staging memory. The receiver reassembles
+stripes out of order — each stripe frame carries ``(name, stripe_idx,
+n_stripes, offset)`` and lands at its offset whatever channel or order it
+arrives in.
+
+Wire protocol (speaks the generic frame format in :mod:`repro.core.wire`;
+both the staging server and the copy-emulation servers implement it):
+
+    stripe_open  {name, dtype, size, n_stripes, credits}
+                 -> {ok, file_id, credits[, path]}   (control connection)
+    stripe       {file_id, name, stripe_idx, n_stripes, offset} + payload
+                 -> {ok, stripe_idx, done, dup, credits}   (data channels,
+                 pipelined; acks return in order per channel)
+
+The server must always grant >= 1 credit: a zero grant with an empty
+pipeline would leave no ack to ever raise it again.
+
+Two data planes per stripe, chosen automatically per dataset:
+
+  * **one-sided** — when ``stripe_open`` returns a ``path`` that exists
+    locally (the staging server's tmpfs region, reachable because client
+    and server share the emulated RDMA fabric), the sender performs the
+    stripe as a one-sided mmap write at its offset and the channel frame
+    is control-only (``sided=1``, no payload). Per-byte cost equals the
+    block path's single memcpy; the credit window plays the role of a
+    QP's send-queue depth.
+  * **payload** — otherwise the stripe's bytes ride the channel socket
+    and the receiver reassembles them at their offset (the copy-emulation
+    engines, or a staging server across a real network).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import os
+import queue
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core import wire
+from repro.core.blocks import plan_blocks
+from repro.core.rdma import RdmaWriter
+
+DEFAULT_STRIPE_BYTES = 4 << 20
+DEFAULT_CREDITS = 4
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    """Per-channel byte/latency breakdown (surfaced in TransferStats)."""
+
+    channel: int
+    nbytes: int = 0             # payload bytes acked on this channel
+    n_stripes: int = 0          # stripes acked
+    stripe_s: float = 0.0       # sum of send->ack wall time per stripe
+    credit_wait_s: float = 0.0  # time the sender blocked waiting for credit
+    peak_unacked: int = 0       # high-water mark of in-flight stripes
+    window: int = 0             # last grant from the receiver
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class _Transfer:
+    """Completion tracker for one striped dataset."""
+
+    def __init__(self, name: str, n_stripes: int, nbytes: int,
+                 on_done: Optional[Callable[["_Transfer"], None]] = None,
+                 writer: Optional[RdmaWriter] = None):
+        self.name = name
+        self.nbytes = nbytes
+        self.event = threading.Event()
+        self.error: Optional[BaseException] = None
+        self._remaining = n_stripes
+        self._lock = threading.Lock()
+        self._finished = False
+        self._callbacks: list[Callable[["_Transfer"], None]] = \
+            [on_done] if on_done else []
+        self._writer = writer
+        if n_stripes == 0:
+            self._finished = True
+            self._finish()
+
+    def stripe_done(self) -> None:
+        with self._lock:
+            self._remaining -= 1
+            if self._remaining != 0 or self._finished:
+                return
+            self._finished = True
+        self._finish()
+
+    def fail(self, exc: BaseException) -> None:
+        with self._lock:
+            if self.error is None:
+                self.error = exc
+            if self._finished:
+                return
+            self._finished = True
+        self._finish()
+
+    def add_done_callback(self, fn: Callable[["_Transfer"], None]) -> None:
+        with self._lock:
+            if not self._finished:
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+    def _finish(self) -> None:
+        # release the one-sided mapping before signalling: a producer that
+        # frees/mutates the region file on completion must not race a
+        # still-open writer view
+        if self._writer is not None:
+            try:
+                self._writer.close()
+            except Exception:  # noqa: BLE001 — completion must not throw
+                pass
+            self._writer = None
+        with self._lock:
+            callbacks, self._callbacks = self._callbacks, []
+        self.event.set()
+        for fn in callbacks:
+            try:
+                fn(self)
+            except Exception:  # noqa: BLE001 — callbacks must not break acks
+                pass
+
+
+class _Stripe:
+    __slots__ = ("transfer", "file_id", "name", "idx", "n_stripes",
+                 "offset", "view", "writer")
+
+    def __init__(self, transfer, file_id, name, idx, n_stripes, offset,
+                 view, writer=None):
+        self.transfer = transfer
+        self.file_id = file_id
+        self.name = name
+        self.idx = idx
+        self.n_stripes = n_stripes
+        self.offset = offset
+        self.view = view
+        self.writer = writer        # RdmaWriter => one-sided data plane
+
+
+class _Channel:
+    """One connection + sender/receiver thread pair with a credit window."""
+
+    def __init__(self, index: int, addr: str, credits: int,
+                 connect: Callable, send_frame: Callable):
+        self.index = index
+        self.stats = ChannelStats(channel=index, window=credits)
+        self._send_frame = send_frame
+        self.sock = connect(addr)
+        # data channels block until shutdown, not until an idle timeout:
+        # an idle receiver parked in recv must not kill a healthy channel
+        self.sock.settimeout(None)
+        self.q: queue.Queue = queue.Queue()
+        self._cond = threading.Condition()
+        self._window = max(1, credits)
+        self._unacked = 0
+        self._inflight: collections.deque = collections.deque()
+        self._inflight_lock = threading.Lock()
+        self._dead: Optional[BaseException] = None
+        self._closing = False
+        self._sender = threading.Thread(target=self._send_loop,
+                                        name=f"chan{index}-send", daemon=True)
+        self._receiver = threading.Thread(target=self._recv_loop,
+                                          name=f"chan{index}-recv",
+                                          daemon=True)
+        self._sender.start()
+        self._receiver.start()
+
+    # -- sender ---------------------------------------------------------
+    def _send_loop(self) -> None:
+        while True:
+            item = self.q.get()
+            if item is None:
+                return
+            if self._dead is not None:
+                item.transfer.fail(self._dead)
+                continue
+            t0 = time.perf_counter()
+            with self._cond:
+                while self._unacked >= self._window and self._dead is None \
+                        and not self._closing:
+                    self._cond.wait(0.5)
+                if self._dead is not None or self._closing:
+                    item.transfer.fail(
+                        self._dead or ConnectionError("channel closed"))
+                    continue
+                self._unacked += 1
+                self.stats.peak_unacked = max(self.stats.peak_unacked,
+                                              self._unacked)
+            self.stats.credit_wait_s += time.perf_counter() - t0
+            header = {"op": "stripe", "file_id": item.file_id,
+                      "name": item.name, "stripe_idx": item.idx,
+                      "n_stripes": item.n_stripes, "offset": item.offset}
+            payload = item.view
+            if item.writer is not None:
+                # one-sided plane: the stripe is a raw mmap store (numpy
+                # copyto releases the GIL, so channels copy concurrently);
+                # only the control frame rides the socket
+                try:
+                    item.writer.write(item.offset, item.view)
+                except Exception as e:  # noqa: BLE001 — item-local failure
+                    with self._cond:
+                        self._unacked -= 1
+                        self._cond.notify_all()
+                    item.transfer.fail(e)
+                    continue
+                header["sided"] = 1
+                header["size"] = len(item.view)
+                payload = None
+            # append before sending: one sender per channel, so deque order
+            # matches wire order and the receiver can match acks FIFO.
+            # The dead-check must share the inflight lock with _fail's
+            # drain — otherwise an item appended just after the receiver
+            # failed the channel is never failed and its transfer (and any
+            # untimed sync on it) hangs forever.
+            with self._inflight_lock:
+                if self._dead is not None:
+                    with self._cond:
+                        self._unacked -= 1
+                        self._cond.notify_all()
+                    item.transfer.fail(self._dead)
+                    continue
+                self._inflight.append((item, time.perf_counter()))
+            try:
+                self._send_frame(self.sock, header, payload)
+            except (OSError, ValueError) as e:
+                self._fail(e)
+
+    # -- receiver -------------------------------------------------------
+    def _recv_loop(self) -> None:
+        while True:
+            try:
+                h, _ = wire.recv_frame(self.sock)
+            except (ConnectionError, OSError) as e:
+                # fail any stripes still awaiting acks even on a shutdown
+                # race — a sender parked on credits must not wait forever
+                self._fail(e if not self._closing
+                           else ConnectionError("channel closed"))
+                return
+            with self._inflight_lock:
+                item, t_sent = self._inflight.popleft() if self._inflight \
+                    else (None, None)
+            with self._cond:
+                self._unacked -= 1
+                self._window = max(1, int(h.get("credits", self._window)))
+                self.stats.window = self._window
+                self._cond.notify_all()
+            if item is None:       # ack with no matching stripe: corrupt
+                self._fail(wire.ProtocolError("unmatched stripe ack"))
+                return
+            self.stats.stripe_s += time.perf_counter() - t_sent
+            if h.get("ok"):
+                self.stats.nbytes += len(item.view)
+                self.stats.n_stripes += 1
+                item.transfer.stripe_done()
+            else:
+                item.transfer.fail(
+                    RuntimeError(f"stripe rejected: {h.get('error')}"))
+
+    def set_window(self, grant: int) -> None:
+        """Adopt a receiver grant arriving out of band (stripe_open)."""
+        with self._cond:
+            self._window = max(1, int(grant))
+            self.stats.window = self._window
+            self._cond.notify_all()
+
+    # -- failure / shutdown --------------------------------------------
+    def _fail(self, exc: BaseException) -> None:
+        with self._inflight_lock:
+            # _dead is published under the inflight lock so the sender's
+            # check-and-append is atomic against this drain
+            with self._cond:
+                if self._dead is None:
+                    self._dead = exc
+                self._cond.notify_all()
+            inflight, self._inflight = list(self._inflight), \
+                collections.deque()
+        for item, _t in inflight:
+            item.transfer.fail(exc)
+
+    def close(self) -> None:
+        with self._cond:
+            self._closing = True
+            self._cond.notify_all()
+        self.q.put(None)
+        self._sender.join(5.0)
+        try:
+            self.sock.shutdown(2)
+        except OSError:
+            pass
+        try:
+            self.sock.close()
+        except OSError:
+            pass
+        self._receiver.join(5.0)
+
+
+class ChannelGroup:
+    """N concurrent striped channels + one control connection.
+
+    ``send_dataset`` is thread-safe and blocking (it returns when every
+    stripe is acked), which makes it a drop-in task body for the FCFS I/O
+    pools — sync()/TaskHandle semantics are unchanged while each dataset's
+    stripes fan out across all channels.
+
+    ``connect`` / ``send_frame`` are pluggable so the copy-emulation
+    engines can keep their cost model (16K userspace chunk copies + CRC
+    per stripe) while reusing the striping/credit machinery.
+    """
+
+    def __init__(self, addr: str, n_channels: int,
+                 stripe_bytes: int = DEFAULT_STRIPE_BYTES,
+                 credits: int = DEFAULT_CREDITS,
+                 connect: Callable = wire.connect,
+                 send_frame: Callable = wire.send_frame,
+                 transfer_timeout: float = 300.0):
+        if n_channels < 1:
+            raise ValueError(f"n_channels must be >= 1, got {n_channels}")
+        if stripe_bytes < 1:
+            raise ValueError(f"stripe_bytes must be >= 1, got {stripe_bytes}")
+        self.addr = addr
+        self.n_channels = n_channels
+        self.stripe_bytes = stripe_bytes
+        self.credits = max(1, credits)
+        self.transfer_timeout = transfer_timeout
+        self._connect = connect
+        self._send_frame = send_frame
+        self._channels: list[_Channel] = []
+        self._ctrl = None
+        self._ctrl_lock = threading.Lock()
+        self._rr = 0
+        self._opened = False
+        self._closed = False
+        self._outstanding = 0                 # submitted, not yet finished
+        self._outstanding_cond = threading.Condition()
+
+    # -- lifecycle ------------------------------------------------------
+    def open(self) -> "ChannelGroup":
+        if self._opened:
+            return self
+        self._ctrl = self._connect(self.addr)
+        self._channels = [
+            _Channel(i, self.addr, self.credits, self._connect,
+                     self._send_frame)
+            for i in range(self.n_channels)
+        ]
+        self._opened = True
+        return self
+
+    def close(self, drain_timeout: float = 30.0) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        # let in-flight transfers finish before tearing the sockets down —
+        # a write that was going to succeed must still succeed when the
+        # producer closes immediately after submitting (pool-stop parity)
+        try:
+            self.sync(drain_timeout)
+        except TimeoutError:
+            pass
+        for ch in self._channels:
+            ch.close()
+        if self._ctrl is not None:
+            try:
+                self._ctrl.close()
+            except OSError:
+                pass
+
+    # -- data plane -----------------------------------------------------
+    def _plan_stripes(self, nbytes: int) -> list[tuple[int, int]]:
+        """Stripe plan: at most ``stripe_bytes`` each, but small enough
+        that every dataset spans all channels — a dataset shorter than
+        ``n_channels * stripe_bytes`` would otherwise leave channels idle
+        (64 KiB floor so tiny writes do not shatter into confetti)."""
+        per_channel = -(-nbytes // self.n_channels)     # ceil div
+        floor = min(self.stripe_bytes, 64 << 10)  # never override the knob
+        stripe = max(min(self.stripe_bytes, per_channel), floor, 1)
+        return plan_blocks(nbytes, stripe)
+
+    def submit_dataset(self, name: str, dtype: str, buf) -> _Transfer:
+        """Asynchronously stripe one named buffer across all channels.
+
+        Returns the :class:`_Transfer` tracker immediately after the
+        stripes are enqueued — datasets pipeline through the channels
+        back-to-back (stripes of the next dataset flow while the previous
+        one's acks are still in flight), which is where the striped path's
+        throughput comes from: a blocking per-dataset send would drain the
+        pipeline between datasets.
+        """
+        if not self._opened or self._closed:
+            raise RuntimeError("ChannelGroup not open")
+        arr = buf if isinstance(buf, np.ndarray) else \
+            np.frombuffer(buf, dtype=np.uint8)
+        flat = arr.reshape(-1).view(np.uint8)
+        nbytes = flat.nbytes
+        stripes = self._plan_stripes(nbytes)
+        with self._ctrl_lock:
+            h, _ = wire.request(
+                self._ctrl,
+                {"op": "stripe_open", "name": name, "dtype": dtype,
+                 "size": nbytes, "n_stripes": len(stripes),
+                 "credits": self.credits})
+        if not h.get("ok"):
+            raise RuntimeError(f"stripe_open failed: {h.get('error')}")
+        file_id = h["file_id"]
+        for ch in self._channels:       # adopt the receiver's current grant
+            ch.set_window(int(h.get("credits", self.credits)))
+        # a locally-reachable region path selects the one-sided data plane
+        # (shared emulated-RDMA fabric); otherwise stripes carry payload
+        path = h.get("path")
+        writer = RdmaWriter(path, nbytes) \
+            if nbytes and path and os.path.exists(path) else None
+        with self._outstanding_cond:
+            self._outstanding += 1
+        tr = _Transfer(name, len(stripes), nbytes,
+                       on_done=self._transfer_done, writer=writer)
+        # round-robin with a moving base so concurrent datasets do not all
+        # pile their first (and for short writes, only) stripe on channel 0
+        with self._ctrl_lock:
+            base, self._rr = self._rr, (self._rr + len(stripes)) \
+                % self.n_channels
+        for i, (off, size) in enumerate(stripes):
+            ch = self._channels[(base + i) % self.n_channels]
+            ch.q.put(_Stripe(tr, file_id, name, i, len(stripes), off,
+                             flat[off:off + size], writer))
+        return tr
+
+    def _transfer_done(self, _tr: _Transfer) -> None:
+        with self._outstanding_cond:
+            self._outstanding -= 1
+            self._outstanding_cond.notify_all()
+
+    def send_dataset(self, name: str, dtype: str, buf,
+                     timeout: Optional[float] = None) -> int:
+        """Blocking form of :meth:`submit_dataset` (FCFS-pool task body):
+        returns the byte count once every stripe is acked."""
+        tr = self.submit_dataset(name, dtype, buf)
+        if not tr.event.wait(timeout or self.transfer_timeout):
+            raise TimeoutError(
+                f"striped transfer {name!r} not acked within "
+                f"{timeout or self.transfer_timeout}s")
+        if tr.error is not None:
+            raise tr.error
+        return tr.nbytes
+
+    def sync(self, timeout: Optional[float] = None) -> None:
+        """Block until every submitted dataset finished (acked or failed)."""
+        deadline = time.monotonic() + timeout if timeout else None
+        with self._outstanding_cond:
+            while self._outstanding > 0:
+                remaining = None
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError(
+                            f"{self._outstanding} striped transfers "
+                            "still in flight")
+                self._outstanding_cond.wait(remaining)
+
+    # -- introspection --------------------------------------------------
+    def channel_stats(self) -> list[dict]:
+        return [ch.stats.as_dict() for ch in self._channels]

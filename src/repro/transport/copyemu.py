@@ -15,6 +15,14 @@ same mechanisms; see DESIGN.md §6 (scaling honesty):
 Connection hygiene: every thread-local socket / client created by the
 emulation is tracked and closed when its owning pool stops or its
 transport closes (they used to leak until process exit).
+
+Striping (``cfg.n_channels > 1``): the emulation engines reuse the
+generic :class:`~repro.transport.channels.ChannelGroup` — stripes are
+round-robined across N concurrent connections with credit-based flow
+control, and the copy servers reassemble them out of order before
+storing/forwarding. The cost model is preserved at both ends: striped
+sends go through 16K userspace chunk copies + CRC per stripe, and the
+server side receives through the same copied path.
 """
 from __future__ import annotations
 
@@ -64,6 +72,8 @@ class _CopyServer:
         self.disk_bw = disk_bw  # B/s cap modeling the paper's 2018 disk array
         self._fwd_socks = _SockCache()
         self._savime_clis = _SockCache()
+        self._asm: dict[str, dict] = {}      # striped reassembly in progress
+        self._asm_lock = threading.Lock()
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._srv.bind(("127.0.0.1", 0))
@@ -100,13 +110,68 @@ class _CopyServer:
                 except (ConnectionError, OSError):
                     return
                 try:
-                    self._sink(header, payload)
-                    wire.send_frame(conn, {"ok": True})
+                    reply = self._handle_frame(header, payload)
                 except Exception as e:  # noqa: BLE001
-                    try:
-                        wire.send_frame(conn, {"ok": False, "error": str(e)})
-                    except OSError:
-                        return
+                    reply = {"ok": False, "error": str(e)}
+                try:
+                    wire.send_frame(conn, reply)
+                except OSError:
+                    return
+
+    def _handle_frame(self, header, payload) -> dict:
+        op = header.get("op")
+        if op == "stripe_open":
+            return self._stripe_open(header)
+        if op == "stripe":
+            return self._stripe(header, payload)
+        self._sink(header, payload)
+        return {"ok": True}
+
+    # -- striped reassembly (same protocol the staging server speaks) ----
+    def _stripe_open(self, h) -> dict:
+        fid = secrets.token_hex(8)
+        need = int(h["n_stripes"])
+        asm = {"name": h["name"], "dtype": h.get("dtype", "uint8"),
+               "buf": bytearray(int(h["size"])), "need": need,
+               "seen": set(), "done": False,
+               "wanted": max(1, int(h.get("credits", 4)))}
+        if need == 0:                       # empty dataset: sink at open
+            self._sink({"name": asm["name"], "dtype": asm["dtype"]},
+                       asm["buf"])
+        else:
+            with self._asm_lock:
+                self._asm[fid] = asm
+        return {"ok": True, "file_id": fid,
+                "credits": max(1, int(h.get("credits", 4)))}
+
+    def _stripe(self, h, payload) -> dict:
+        idx, off = int(h["stripe_idx"]), int(h["offset"])
+        with self._asm_lock:
+            asm = self._asm.get(h["file_id"])
+            if asm is None:
+                raise ValueError(f"unknown striped file {h['file_id']!r}")
+            dup = idx in asm["seen"]
+            if off < 0 or off + len(payload) > len(asm["buf"]):
+                raise ValueError(
+                    f"stripe [{off},{off + len(payload)}) outside dataset "
+                    f"[0,{len(asm['buf'])})")
+        # the copy emulation has no staging-memory model: grant whatever
+        # window the sender asked for at stripe_open (never 0)
+        reply = {"ok": True, "stripe_idx": idx, "dup": dup, "done": False,
+                 "credits": asm["wanted"]}
+        if dup:
+            return reply
+        asm["buf"][off:off + len(payload)] = payload   # land at its offset
+        with self._asm_lock:
+            asm["seen"].add(idx)
+            if len(asm["seen"]) >= asm["need"] and not asm["done"]:
+                asm["done"] = True
+                self._asm.pop(h["file_id"], None)
+                reply["done"] = True
+        if reply["done"]:
+            self._sink({"name": asm["name"], "dtype": asm["dtype"]},
+                       asm["buf"])
+        return reply
 
     def _recv_copied(self, conn):
         """recv with deliberate userspace chunk copies + CRC per chunk —
@@ -183,19 +248,27 @@ class _CopyServerFwdToSavime(_CopyServer):
                          payload)
 
 
+def _copied_send_frame(sock: socket.socket, header: dict, payload) -> None:
+    """Frame writer with the scp/ssh cost model: 16K userspace chunk
+    copies + CRC per chunk (vs ``wire.send_frame``'s direct sendall).
+    Plugged into ChannelGroup so striped sends keep the same CPU path."""
+    mv = memoryview(payload).cast("B") if not isinstance(payload, memoryview) \
+        else payload.cast("B")
+    hb = json.dumps(dict(header, nbytes=len(mv))).encode()
+    sock.sendall(struct.pack(">Q", len(hb)) + hb)
+    crc = 0
+    for off in range(0, len(mv), _SCP_CHUNK):
+        chunk = bytes(mv[off:off + _SCP_CHUNK])       # userspace copy
+        crc = zlib.crc32(chunk, crc)                  # cipher-cost proxy
+        sock.sendall(chunk)
+
+
 def _copy_send(socks: _SockCache, addr: str, name: str,
                dtype: str, buf: np.ndarray):
     """Client side of the scp/ssh emulation: chunked sendall with CRC."""
     sock = socks.get(addr)
     payload = memoryview(buf.reshape(-1).view(np.uint8))
-    hb = json.dumps({"name": name, "dtype": dtype,
-                     "nbytes": len(payload)}).encode()
-    sock.sendall(struct.pack(">Q", len(hb)) + hb)
-    crc = 0
-    for off in range(0, len(payload), _SCP_CHUNK):
-        chunk = bytes(payload[off:off + _SCP_CHUNK])  # userspace copy
-        crc = zlib.crc32(chunk, crc)                  # cipher-cost proxy
-        sock.sendall(chunk)
+    _copied_send_frame(sock, {"name": name, "dtype": dtype}, payload)
     h, _ = wire.recv_frame(sock)
     if not h.get("ok"):
         raise RuntimeError(h.get("error"))
@@ -215,6 +288,7 @@ class _CopyTransportBase(Transport):
             raise ValueError(f"{self.name} needs cfg.savime_addr")
         self._pool: Optional[FCFSPool] = None
         self._socks = _SockCache()
+        self._group = None                  # striped channels, if enabled
         self._ctrl_savime: Optional[SavimeClient] = None
         self._ctrl_lock = threading.Lock()
 
@@ -223,6 +297,21 @@ class _CopyTransportBase(Transport):
                         straggler_timeout=self.cfg.straggler_timeout)
         pool.add_stop_callback(self._socks.close_all)
         return pool
+
+    def _make_group(self, addr: str):
+        """Striped ChannelGroup against ``addr`` when cfg asks for more
+        than one channel — with the copied-send cost model per stripe."""
+        if self.cfg.n_channels <= 1:
+            return None
+        from repro.transport.channels import ChannelGroup
+        return ChannelGroup(
+            addr, n_channels=self.cfg.n_channels,
+            stripe_bytes=self.cfg.stripe_bytes or self.cfg.block_size,
+            credits=self.cfg.credits,
+            send_frame=_copied_send_frame).open()
+
+    def channel_stats(self) -> list[dict]:
+        return self._group.channel_stats() if self._group is not None else []
 
     def sync(self, timeout: Optional[float] = None) -> None:
         self._pool.sync(timeout)
@@ -260,6 +349,7 @@ class _ScpTransport(_CopyTransportBase):
             store_dir=self._store, fsync=(self.storage == "disk"),
             disk_bw=self.cfg.disk_bw if self.storage == "disk" else None)
         self._pool = self._make_pool(self.name)
+        self._group = self._make_group(self._srv.addr)
         self._fwd_pool = FCFSPool(self.cfg.send_threads, f"{self.name}-fwd")
         self._fwd_savime = _SockCache()
         self._fwd_pool.add_stop_callback(self._fwd_savime.close_all)
@@ -268,6 +358,9 @@ class _ScpTransport(_CopyTransportBase):
 
     def write(self, name: str, dtype: str, buf):
         self._written.append((name, dtype, buf.nbytes))
+        if self._group is not None:
+            return self._pool.submit(self._group.send_dataset, name, dtype,
+                                     buf, name=f"{self.name}-{name}")
         return self._pool.submit(_copy_send, self._socks, self._srv.addr,
                                  name, dtype, buf, name=f"{self.name}-{name}")
 
@@ -295,6 +388,8 @@ class _ScpTransport(_CopyTransportBase):
     def close(self) -> None:
         self._pool.stop()
         self._fwd_pool.stop()
+        if self._group is not None:
+            self._group.close()
         self._srv.stop()
         self._close_ctrl()
         shutil.rmtree(self._store, ignore_errors=True)
@@ -321,8 +416,14 @@ class SshDirectTransport(_CopyTransportBase):
         self._hop1 = _CopyServer(store_dir=None, fsync=False,
                                  forward_addr=self._hop2.addr)
         self._pool = self._make_pool(self.name)
+        # stripes ride the first (compute->staging) hop; hop1 reassembles
+        # and forwards whole datasets to the SAVIME hop as before
+        self._group = self._make_group(self._hop1.addr)
 
     def write(self, name: str, dtype: str, buf):
+        if self._group is not None:
+            return self._pool.submit(self._group.send_dataset, name, dtype,
+                                     buf, name=f"ssh-{name}")
         return self._pool.submit(_copy_send, self._socks, self._hop1.addr,
                                  name, dtype, buf, name=f"ssh-{name}")
 
@@ -331,6 +432,8 @@ class SshDirectTransport(_CopyTransportBase):
 
     def close(self) -> None:
         self._pool.stop()
+        if self._group is not None:
+            self._group.close()
         self._hop1.stop()
         self._hop2.stop()
         self._close_ctrl()

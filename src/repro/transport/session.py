@@ -105,6 +105,7 @@ class TransferSession:
         if self._closed or not self._opened:
             self._closed = True
             return
+        self._collect_channel_stats()
         t = time.perf_counter()
         try:
             self.transport.close()
@@ -143,7 +144,16 @@ class TransferSession:
         self.stats.write_wait_s += time.perf_counter() - t_wait
         if self._t0 is None:
             self._t0 = time.perf_counter()
-        handle = self.transport.write(name, dtype, arr)
+        try:
+            handle = self.transport.write(name, dtype, arr)
+        except BaseException:
+            # striped transports can fail synchronously (stripe_open is a
+            # control RTT); the reserved inflight bytes must be returned
+            # or later writes block against a phantom reservation
+            with self._cond:
+                self._inflight -= size
+                self._cond.notify_all()
+            raise
         fut = DatasetFuture(name, size, handle)
         with self._cond:
             self._pinned[id(fut)] = arr           # pin until completion
@@ -174,6 +184,7 @@ class TransferSession:
         if self._t0 is not None and self._unsynced:
             self.stats.to_staging_s = time.perf_counter() - self._t0
         self._unsynced = False
+        self._collect_channel_stats()
         self._emit("sync")
 
     def drain(self, timeout: Optional[float] = None) -> None:
@@ -225,6 +236,16 @@ class TransferSession:
                 fn(payload)
             except Exception:  # noqa: BLE001 — hooks must not break egress
                 pass
+
+    def _collect_channel_stats(self) -> None:
+        """Snapshot per-channel byte/latency breakdowns into the stats
+        (striped transports only; single-connection paths report [])."""
+        try:
+            ch = self.transport.channel_stats()
+        except Exception:  # noqa: BLE001 — stats must not break egress
+            return
+        if ch:
+            self.stats.channels = ch
 
     def _check_live(self) -> None:
         if not self._opened:

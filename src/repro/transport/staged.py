@@ -44,7 +44,10 @@ class StagedTransport(Transport):
             addr = self._staging.addr
         self.comm = Communicator(addr, self.cfg.io_threads,
                                  self.cfg.block_size,
-                                 self.cfg.straggler_timeout)
+                                 self.cfg.straggler_timeout,
+                                 n_channels=self.cfg.n_channels,
+                                 stripe_bytes=self.cfg.stripe_bytes,
+                                 credits=self.cfg.credits)
         self._ctrl = wire.connect(addr)
 
     def close(self) -> None:
@@ -76,6 +79,9 @@ class StagedTransport(Transport):
 
     def server_stats(self) -> dict:
         return self._ctrl_request({"op": "stats"})
+
+    def channel_stats(self) -> list[dict]:
+        return self.comm.channel_stats() if self.comm is not None else []
 
     def _ctrl_request(self, header: dict) -> dict:
         with self._ctrl_lock:

@@ -1,0 +1,420 @@
+"""Striped multi-channel transfers: reassembly under reordered / duplicate
+/ missing stripes, credit-based backpressure, per-channel stats parity,
+connection/thread hygiene under repeated sessions, and the wire/queue
+correctness fixes that ride along (ConnCache addr keying, header-length
+cap, sendfile stall timeout, no requeue-after-stop, bounded completions).
+"""
+import os
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import SavimeClient, SavimeServer, StagingServer
+from repro.core import wire
+from repro.core.queues import FCFSPool
+from repro.transport import ChannelGroup, TransferSession, TransportConfig
+
+pytestmark = pytest.mark.filterwarnings("ignore::pytest.PytestUnraisableExceptionWarning")
+
+
+@pytest.fixture()
+def savime():
+    srv = SavimeServer().start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture()
+def staging(savime):
+    srv = StagingServer(savime.addr, mem_capacity=256 << 20,
+                        send_threads=2).start()
+    yield srv
+    srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# striped end-to-end integrity
+# ---------------------------------------------------------------------------
+
+
+def test_striped_rdma_roundtrip(savime, staging):
+    cfg = TransportConfig(staging_addr=staging.addr, n_channels=3,
+                          block_size=1 << 20, stripe_bytes=64 << 10,
+                          io_threads=2)
+    rng = np.random.default_rng(0)
+    bufs = {f"d{i}": rng.standard_normal(40_000) for i in range(5)}
+    with TransferSession("rdma_staged", cfg) as sess:
+        futs = [sess.write(n, b, dtype="float64") for n, b in bufs.items()]
+        sess.sync()
+        assert all(f.done() for f in futs)
+    for n, b in bufs.items():
+        got = np.frombuffer(savime.engine.datasets[n], dtype=np.float64)
+        assert np.array_equal(got, b), n
+    assert staging.stats["stripes"] > 0
+
+
+@pytest.mark.parametrize("engine", ["scp_mem", "ssh_direct"])
+def test_striped_copyemu_roundtrip(savime, engine):
+    cfg = TransportConfig(savime_addr=savime.addr, n_channels=2,
+                          stripe_bytes=32 << 10, io_threads=2)
+    rng = np.random.default_rng(1)
+    bufs = {f"{engine}_d{i}": rng.standard_normal(20_000) for i in range(3)}
+    with TransferSession(engine, cfg) as sess:
+        for n, b in bufs.items():
+            sess.write(n, b, dtype="float64")
+        sess.sync()
+        sess.drain()
+    for n, b in bufs.items():
+        got = np.frombuffer(savime.engine.datasets[n], dtype=np.float64)
+        assert np.array_equal(got, b), n
+    assert sess.stats.channels and len(sess.stats.channels) == 2
+
+
+def test_striped_empty_dataset_completes(savime, staging):
+    cfg = TransportConfig(staging_addr=staging.addr, n_channels=2)
+    with TransferSession("rdma_staged", cfg) as sess:
+        fut = sess.write("empty", np.empty(0, dtype=np.uint8))
+        sess.sync()
+        assert fut.done()
+
+
+# ---------------------------------------------------------------------------
+# stripe protocol: reordering, duplicates, missing stripes, bad offsets
+# ---------------------------------------------------------------------------
+
+
+def _stripe_open(sock, name, payload, n_stripes):
+    h, _ = wire.request(sock, {"op": "stripe_open", "name": name,
+                               "dtype": "uint8", "size": len(payload),
+                               "n_stripes": n_stripes, "credits": 4})
+    assert h["ok"], h
+    return h
+
+
+def _send_stripe(sock, file_id, idx, n_stripes, offset, chunk):
+    h, _ = wire.request(sock, {"op": "stripe", "file_id": file_id,
+                               "stripe_idx": idx, "n_stripes": n_stripes,
+                               "offset": offset}, chunk)
+    return h
+
+
+def test_reassembly_reordered_and_duplicate_stripes(savime, staging):
+    rng = np.random.default_rng(2)
+    payload = rng.integers(0, 255, 3 * 1024, dtype=np.uint8).tobytes()
+    s1 = wire.connect(staging.addr)
+    s2 = wire.connect(staging.addr)
+    try:
+        h = _stripe_open(s1, "reorder", payload, 3)
+        fid = h["file_id"]
+        chunks = [payload[0:1024], payload[1024:2048], payload[2048:3072]]
+        # out of order, across two connections
+        a = _send_stripe(s2, fid, 2, 3, 2048, chunks[2])
+        assert a["ok"] and not a["done"] and not a["dup"]
+        a = _send_stripe(s1, fid, 0, 3, 0, chunks[0])
+        assert a["ok"] and not a["done"]
+        # duplicate of an already-received stripe: idempotent ack
+        a = _send_stripe(s2, fid, 0, 3, 0, chunks[0])
+        assert a["ok"] and a["dup"] and not a["done"]
+        before = staging.stats["datasets"]
+        a = _send_stripe(s1, fid, 1, 3, 1024, chunks[1])
+        assert a["ok"] and a["done"]
+        assert staging.stats["datasets"] == before + 1
+        assert staging.stats["stripe_dups"] >= 1
+        staging.drain(10)
+        got = bytes(savime.engine.datasets["reorder"].view(np.uint8))
+        assert got == payload
+    finally:
+        s1.close()
+        s2.close()
+
+
+def test_missing_stripe_keeps_dataset_pending(savime, staging):
+    payload = b"\x07" * 2048
+    s = wire.connect(staging.addr)
+    try:
+        h = _stripe_open(s, "partial", payload, 2)
+        before = staging.stats["datasets"]
+        a = _send_stripe(s, h["file_id"], 0, 2, 0, payload[:1024])
+        assert a["ok"] and not a["done"]
+        staging.drain(5)
+        assert staging.stats["datasets"] == before      # not complete
+        assert "partial" not in savime.engine.datasets
+        a = _send_stripe(s, h["file_id"], 1, 2, 1024, payload[1024:])
+        assert a["ok"] and a["done"]
+        staging.drain(10)
+        assert bytes(savime.engine.datasets["partial"].view(np.uint8)) \
+            == payload
+    finally:
+        s.close()
+
+
+def test_bad_stripe_rejected_and_stream_stays_framed(savime, staging):
+    payload = b"\x01" * 1024
+    s = wire.connect(staging.addr)
+    try:
+        h = _stripe_open(s, "bad", payload, 1)
+        # offset outside the region: rejected, but the payload must be
+        # drained so the connection keeps working
+        a = _send_stripe(s, h["file_id"], 0, 1, 4096, payload)
+        assert not a["ok"] and "outside" in a["error"]
+        a = _send_stripe(s, "no-such-file", 0, 1, 0, payload)
+        assert not a["ok"]
+        # a sided (control-only) frame must not smuggle payload bytes —
+        # the mixed form would bypass the extent check and desync framing
+        a, _ = wire.request(s, {"op": "stripe", "file_id": h["file_id"],
+                                "stripe_idx": 0, "n_stripes": 1,
+                                "offset": 0, "sided": 1, "size": 1024},
+                            payload)
+        assert not a["ok"] and "payload" in a["error"]
+        a = _send_stripe(s, h["file_id"], 0, 1, 0, payload)  # still works
+        assert a["ok"] and a["done"]
+    finally:
+        s.close()
+
+
+# ---------------------------------------------------------------------------
+# credit-based flow control
+# ---------------------------------------------------------------------------
+
+
+def test_credit_grant_shrinks_under_memory_pressure(savime):
+    st = StagingServer(savime.addr, mem_capacity=1 << 20).start()
+    try:
+        assert st._credit_grant(8) == 8          # empty tmpfs: full grant
+        ctrl = wire.connect(st.addr)
+        h, _ = wire.request(ctrl, {"op": "write_req", "name": "fill",
+                                   "size": (1 << 20) - 1024})
+        assert h["ok"]
+        assert st._credit_grant(8) == 1          # nearly full: minimum
+        # protocol level: stripe_open acks carry the shrunken grant
+        h2 = _stripe_open(ctrl, "pressed", b"\x00" * 512, 1)
+        assert h2["credits"] == 1
+        ctrl.close()
+    finally:
+        st.stop()
+
+
+class _SlowAckServer:
+    """Minimal stripe endpoint: grants a window of 1 and acks slowly."""
+
+    def __init__(self, ack_delay=0.03):
+        self.ack_delay = ack_delay
+        self.max_seen_inflight = 0
+        self._srv = socket.socket()
+        self._srv.bind(("127.0.0.1", 0))
+        self._srv.listen(8)
+        self.addr = f"127.0.0.1:{self._srv.getsockname()[1]}"
+        self._stop = threading.Event()
+        threading.Thread(target=self._accept, daemon=True).start()
+
+    def _accept(self):
+        while not self._stop.is_set():
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return
+            threading.Thread(target=self._serve, args=(conn,),
+                             daemon=True).start()
+
+    def _serve(self, conn):
+        with conn:
+            while True:
+                try:
+                    h, _ = wire.recv_frame(conn)
+                except (ConnectionError, OSError):
+                    return
+                if h.get("op") == "stripe_open":
+                    reply = {"ok": True, "file_id": "f1", "credits": 1}
+                else:
+                    time.sleep(self.ack_delay)
+                    reply = {"ok": True, "stripe_idx": h.get("stripe_idx"),
+                             "credits": 1, "done": False, "dup": False}
+                try:
+                    wire.send_frame(conn, reply)
+                except OSError:
+                    return
+
+    def stop(self):
+        self._stop.set()
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+
+
+def test_credit_exhaustion_backpressure():
+    srv = _SlowAckServer()
+    group = ChannelGroup(srv.addr, n_channels=1, stripe_bytes=1 << 10,
+                         credits=4).open()
+    try:
+        group.send_dataset("slow", "uint8",
+                           np.zeros(6 << 10, dtype=np.uint8), timeout=30)
+        st = group.channel_stats()[0]
+        # the receiver granted a window of 1: the sender never had more
+        # than one unacked stripe in flight and spent time blocked on
+        # credits while acks trickled in
+        assert st["window"] == 1
+        assert st["peak_unacked"] == 1
+        assert st["credit_wait_s"] > 0
+        assert st["n_stripes"] == 6
+    finally:
+        group.close()
+        srv.stop()
+
+
+# ---------------------------------------------------------------------------
+# per-channel stats parity
+# ---------------------------------------------------------------------------
+
+
+def test_per_channel_stats_match_session_totals(savime, staging):
+    cfg = TransportConfig(staging_addr=staging.addr, n_channels=4,
+                          stripe_bytes=128 << 10, io_threads=1)
+    with TransferSession("rdma_staged", cfg) as sess:
+        for i in range(4):
+            sess.write(f"p{i}", np.ones(64 << 10))   # 512 KiB each
+        sess.sync()
+    chans = sess.stats.channels
+    assert len(chans) == 4
+    assert sum(c["nbytes"] for c in chans) == sess.stats.nbytes
+    assert sum(c["n_stripes"] for c in chans) == staging.stats["stripes"]
+    assert all(c["n_stripes"] > 0 for c in chans)    # round-robined
+
+
+def test_single_channel_uses_legacy_path(savime, staging):
+    cfg = TransportConfig(staging_addr=staging.addr, n_channels=1)
+    with TransferSession("rdma_staged", cfg) as sess:
+        sess.write("legacy", np.ones(1024))
+        sess.sync()
+        assert sess.transport.comm._channels is None
+    assert sess.stats.channels == []
+
+
+# ---------------------------------------------------------------------------
+# soak: no thread / socket growth across repeated striped sessions
+# ---------------------------------------------------------------------------
+
+
+def _fd_count():
+    return len(os.listdir("/proc/self/fd"))
+
+
+def test_soak_no_thread_or_socket_growth(savime, staging):
+    def one_session(tag):
+        cfg = TransportConfig(staging_addr=staging.addr, n_channels=3,
+                              stripe_bytes=32 << 10)
+        with TransferSession("rdma_staged", cfg) as sess:
+            for i in range(3):
+                sess.write(f"{tag}_{i}", np.ones(8 << 10))
+            sess.sync()
+
+    one_session("warmup")           # populate lazy per-thread state
+    time.sleep(0.2)
+    threads0, fds0 = threading.active_count(), _fd_count()
+    for r in range(4):
+        one_session(f"soak{r}")
+    deadline = time.monotonic() + 5
+    while time.monotonic() < deadline:
+        if threading.active_count() <= threads0 and _fd_count() <= fds0 + 2:
+            break
+        time.sleep(0.1)
+    assert threading.active_count() <= threads0, \
+        f"thread leak: {threads0} -> {threading.active_count()}"
+    assert _fd_count() <= fds0 + 2, f"fd leak: {fds0} -> {_fd_count()}"
+
+
+# ---------------------------------------------------------------------------
+# wire fixes: ConnCache addr keying, header cap, sendfile stall timeout
+# ---------------------------------------------------------------------------
+
+
+def test_conncache_keyed_by_addr(savime, staging):
+    cache = wire.ConnCache()
+    a = cache.get(savime.addr)
+    b = cache.get(staging.addr)
+    assert a is not b, "one thread talking to two addrs must get two conns"
+    assert cache.get(savime.addr) is a          # still cached per addr
+    cache.close_all()
+    assert a.fileno() == -1 and b.fileno() == -1
+
+
+def test_recv_frame_header_length_capped():
+    a, b = socket.socketpair()
+    try:
+        # a corrupt 8-byte prefix claiming a gigantic header must raise,
+        # not allocate gigabytes
+        a.sendall(struct.pack(">Q", 1 << 40) + b"junk")
+        with pytest.raises(wire.ProtocolError, match="header length"):
+            wire.recv_frame(b)
+    finally:
+        a.close()
+        b.close()
+
+
+def test_sendfile_raises_timeout_on_stalled_peer(tmp_path):
+    srv = socket.socket()
+    srv.bind(("127.0.0.1", 0))
+    srv.listen(1)
+    cli = socket.create_connection(srv.getsockname())
+    peer, _ = srv.accept()
+    path = tmp_path / "payload.bin"
+    path.write_bytes(b"\x00" * (8 << 20))
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        cli.setsockopt(socket.SOL_SOCKET, socket.SO_SNDBUF, 16 << 10)
+        peer.setsockopt(socket.SOL_SOCKET, socket.SO_RCVBUF, 16 << 10)
+        cli.settimeout(0.05)          # internally non-blocking sendfile
+        with pytest.raises(TimeoutError, match="not writable"):
+            # the peer never reads: the buffers fill and writability never
+            # arrives — this used to spin in the EAGAIN loop forever
+            wire.send_frame_from_file(cli, {"op": "x"}, fd, 8 << 20,
+                                      timeout=0.3)
+    finally:
+        os.close(fd)
+        cli.close()
+        peer.close()
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# queue fixes: no requeue after stop, bounded completion history
+# ---------------------------------------------------------------------------
+
+
+def test_failed_task_not_requeued_after_stop():
+    release = threading.Event()
+
+    def fails_late():
+        release.wait(5)
+        raise RuntimeError("boom")
+
+    pool = FCFSPool(1, "stop-retry-test", max_retries=5)
+    h = pool.submit(fails_late, name="failer")
+    pool._stop.set()                 # stop initiated while task in flight
+    release.set()
+    with pytest.raises(RuntimeError, match="boom"):
+        h.wait(5)
+    # without the fix the failure is re-enqueued behind the shutdown
+    # sentinels: _pending never drains and sync() hangs forever
+    pool.sync(timeout=2)
+    assert pool.pending() == 0
+    pool.stop()
+
+
+def test_completed_history_bounded_with_aggregate_stats():
+    pool = FCFSPool(2, "ring-test", completed_cap=16)
+    for i in range(100):
+        pool.submit(lambda: None, name=f"t{i}")
+    pool.sync(timeout=30)
+    assert len(pool.completed) == 16           # capped ring
+    assert pool.n_completed == 100             # aggregate keeps counting
+    stats = pool.latency_stats()
+    assert stats["count"] == 100
+    assert stats["mean_s"] >= 0
+    assert stats["failed"] == 0
+    assert len(pool.latencies()) <= 16
+    pool.stop()
