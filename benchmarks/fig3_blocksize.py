@@ -1,7 +1,12 @@
 """Fig 3 repro: elapsed time to staging vs RDMA block size, 1 I/O thread per
 client. Paper claim C1: monotone improvement with block size (per-block
 registration + control RTT amortize). Clients are TransferSessions on the
-``rdma_staged`` transport."""
+``rdma_staged`` transport.
+
+The sweep extends down to 16 KB / 64 KB blocks so the small-block
+collapse the paper measures (and the coalescing/binary fast path of
+``fig9_coalesce.py`` attacks) is actually on the curve, not just implied
+by its left edge."""
 from __future__ import annotations
 
 import time
@@ -11,7 +16,7 @@ from benchmarks.common import (ci95, csv_row, fresh_stack, make_buffers,
 
 
 def run(n_clients=3, n_files=8, file_mb=4, trials=5, io_threads=1,
-        blocks_kb=(256, 1024, 4096, 16384), quiet=False):
+        blocks_kb=(16, 64, 256, 1024, 4096, 16384), quiet=False):
     bufs = make_buffers(n_clients * n_files, file_mb << 20)
     total = sum(b.nbytes for b in bufs)
     results = {}

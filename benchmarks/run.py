@@ -12,7 +12,7 @@ def main() -> None:
 
     from benchmarks import (fig3_blocksize, fig4_threads, fig5_scaling,
                             fig6_baselines, fig7_query_latency,
-                            fig8_striping, roofline)
+                            fig8_striping, fig9_coalesce, roofline)
 
     print("name,us_per_call,derived")
     if args.full:
@@ -22,9 +22,11 @@ def main() -> None:
         fig6_baselines.run(n_files=16, file_mb=8, trials=5)
         fig7_query_latency.run(trials=8)
         fig8_striping.run(n_files=2, file_mb=32, trials=5)
+        fig9_coalesce.run(ds_kb=(16, 64, 256, 1024, 4096, 16384), trials=7,
+                          budget_mb=128)
     else:
         fig3_blocksize.run(n_clients=2, n_files=4, file_mb=4, trials=3,
-                           blocks_kb=(256, 1024, 4096, 16384))
+                           blocks_kb=(16, 64, 256, 1024, 4096, 16384))
         fig4_threads.run(trials=3)
         fig5_scaling.run(sizes_mb=(8, 16, 32, 64), trials=3)
         fig6_baselines.run(n_files=8, file_mb=4, trials=3)
@@ -32,6 +34,7 @@ def main() -> None:
                                trials=4)
         fig8_striping.run(n_files=2, file_mb=8, trials=3,
                           blocks_kb=(1024, 4096), channels=(1, 2, 4))
+        fig9_coalesce.run(ds_kb=(16, 64, 16384), trials=3, budget_mb=16)
     roofline.run()
 
 

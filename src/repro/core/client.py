@@ -37,32 +37,57 @@ class Communicator:
     connections + credit-based flow control) instead of the single
     per-thread connection; the FCFS queue/sync semantics are unchanged —
     only the per-dataset data plane widens.
+
+    Two small-regime levers (DESIGN.md §10), both off by default:
+    ``wire_format="bin1"`` negotiates the struct-packed fast path per
+    connection (per-block ``reg_block``/ack frames skip JSON and ride
+    single ``sendmsg`` calls); ``coalesce_bytes > 0`` routes datasets
+    below the threshold through a :class:`~repro.transport.coalesce.
+    Coalescer` that packs them into one ``batch_open`` + ``batch_write``
+    round-trip instead of 2+ control RTTs each.
     """
 
     def __init__(self, addr: str, io_threads: int, block_size: int,
                  straggler_timeout: Optional[float] = None,
                  n_channels: int = 1, stripe_bytes: Optional[int] = None,
-                 credits: int = 4):
+                 credits: int = 4, wire_format: str = wire.WIRE_JSON,
+                 coalesce_bytes: int = 0, linger_ms: float = 2.0):
+        if wire_format not in wire.SUPPORTED_WIRE:
+            raise ValueError(f"unknown wire_format {wire_format!r}; "
+                             f"supported: {', '.join(wire.SUPPORTED_WIRE)}")
         self.addr = addr
         self.block_size = block_size
+        self.wire_format = wire_format
         self._pool = None
         self._socks = wire.ConnCache()   # one conn (≈ RC QP) per I/O thread
         self._channels = None
+        self._coalescer = None
+        if coalesce_bytes > 0:
+            # imported lazily: repro.transport imports this module
+            from repro.transport.coalesce import Coalescer
+            self._coalescer = Coalescer(self._flush_batch, coalesce_bytes,
+                                        linger_ms=linger_ms)
         if n_channels > 1:
             # striped mode bypasses the I/O pool entirely — don't start
             # worker threads that would only ever idle
-            # (imported lazily: repro.transport imports this module)
             from repro.transport.channels import ChannelGroup
             self._channels = ChannelGroup(
                 addr, n_channels=n_channels,
                 stripe_bytes=stripe_bytes or block_size,
-                credits=credits).open()
+                credits=credits, wire_format=wire_format).open()
         else:
             self._pool = FCFSPool(io_threads, "libstaging-io",
                                   straggler_timeout=straggler_timeout)
 
+    def _connect(self, addr: str):
+        sock = wire.connect(addr)
+        if self.wire_format == wire.WIRE_BIN1:
+            # per-connection handshake; an old server leaves us on JSON
+            wire.negotiate(sock)
+        return sock
+
     def _conn(self):
-        return self._socks.get(self.addr)
+        return self._socks.get(self.addr, factory=self._connect)
 
     def _request(self, header: dict, payload=None) -> dict:
         h, _ = wire.request(self._conn(), header, payload)
@@ -76,14 +101,23 @@ class Communicator:
         # NB: "nbytes" is reserved by the wire framing; use "size"
         h = self._request({"op": "write_req", "name": name, "dtype": dtype,
                            "size": nbytes})
+        conn = self._conn()
+        use_bin = wire.negotiated(conn) == wire.WIRE_BIN1
         writer = RdmaWriter(h["path"], nbytes)
         try:
             flat = buf.reshape(-1).view(np.uint8)
             for off, size in plan_blocks(nbytes, self.block_size):
                 # ask for the remote block (server registers on demand)...
-                grant = self._request({"op": "reg_block",
-                                       "file_id": h["file_id"],
-                                       "offset": off, "size": size})
+                hdr = {"op": "reg_block", "file_id": h["file_id"],
+                       "offset": off, "size": size}
+                if use_bin:     # fast path: packed header, one sendmsg
+                    wire.send_frame_bin(conn, hdr)
+                    grant, _ = wire.recv_frame(conn)
+                    if not grant.get("ok"):
+                        raise RuntimeError(
+                            f"staging error: {grant.get('error')}")
+                else:
+                    grant = self._request(hdr)
                 # ...then one-sided RDMA write, no server CPU involved
                 writer.write(grant["offset"], flat[off:off + size],
                              grant["rkey"])
@@ -93,7 +127,33 @@ class Communicator:
             writer.close()
         return nbytes
 
+    # -- the coalesced batch flush (runs on the coalescer worker) --------
+    def _flush_batch(self, items) -> None:
+        """One round-trip for N small datasets: pipelined ``batch_open``
+        (reservations) + ``batch_write`` (jumbo payload), pushed in a
+        single vectored ``sendmsg`` — nothing is concatenated in user
+        space, the payload iovec list is the item buffers themselves."""
+        sock = self._conn()       # coalescer worker gets its own cached conn
+        open_hdr = {"op": "batch_open",
+                    "items": [{"name": it.name, "dtype": it.dtype,
+                               "size": it.nbytes} for it in items]}
+        write_hdr = {"op": "batch_write", "count": len(items)}
+        payload = [it.buf for it in items if it.nbytes]
+        wire.send_frames_vectored(
+            sock, [(open_hdr, None), (write_hdr, payload)],
+            fmt=wire.negotiated(sock))
+        oh, _ = wire.recv_frame(sock)
+        wh, _ = wire.recv_frame(sock)
+        if not oh.get("ok"):
+            raise RuntimeError(f"batch_open failed: {oh.get('error')}")
+        if not wh.get("ok"):
+            raise RuntimeError(f"batch_write failed: {wh.get('error')}")
+
     def submit(self, name: str, dtype: str, buf: np.ndarray) -> TaskHandle:
+        if self._coalescer is not None and \
+                buf.nbytes < self._coalescer.coalesce_bytes:
+            flat = buf.reshape(-1).view(np.uint8)
+            return self._coalescer.add(name, dtype, flat, buf.nbytes)
         if self._channels is not None:
             # striped mode bypasses the I/O pool entirely: stripes are
             # enqueued onto the channels right away and datasets pipeline
@@ -112,12 +172,16 @@ class Communicator:
                                  name=f"write-{name}")
 
     def sync(self, timeout: Optional[float] = None) -> None:
+        if self._coalescer is not None:
+            self._coalescer.sync(timeout)
         if self._channels is not None:
             self._channels.sync(timeout)
         else:
             self._pool.sync(timeout)
 
     def stop(self) -> None:
+        if self._coalescer is not None:
+            self._coalescer.close()      # flushes buffered small datasets
         if self._pool is not None:
             self._pool.stop()            # joins in-flight transfers first
         self._socks.close_all()          # per-thread QPs die with the pool
@@ -136,7 +200,8 @@ class StagingClient:
                  straggler_timeout: Optional[float] = None,
                  max_inflight_bytes: Optional[int] = None,
                  n_channels: int = 1, stripe_bytes: Optional[int] = None,
-                 credits: int = 4):
+                 credits: int = 4, wire_format: str = wire.WIRE_JSON,
+                 coalesce_bytes: int = 0, linger_ms: float = 2.0):
         # imported lazily: repro.transport's engine modules import this
         # module for Communicator
         from repro.transport import TransferSession, TransportConfig
@@ -145,7 +210,8 @@ class StagingClient:
             straggler_timeout=straggler_timeout,
             max_inflight_bytes=max_inflight_bytes,
             n_channels=n_channels, stripe_bytes=stripe_bytes,
-            credits=credits)).open()
+            credits=credits, wire_format=wire_format,
+            coalesce_bytes=coalesce_bytes, linger_ms=linger_ms)).open()
 
     @property
     def comm(self) -> Communicator:

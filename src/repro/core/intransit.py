@@ -45,6 +45,9 @@ class InTransitConfig:
     n_channels: int = 1              # striped egress connections (1 = off)
     stripe_bytes: Optional[int] = None  # stripe size (None = block_size)
     credits: int = 4                 # per-channel credit window request
+    wire_format: str = "json"        # "json" (legacy) | "bin1" fast path
+    coalesce_bytes: int = 0          # coalesce datasets below this (0 = off)
+    linger_ms: float = 2.0           # coalescing flush window
 
 
 def quantize_int8_np(x: np.ndarray, block: int) -> tuple[np.ndarray, np.ndarray]:
@@ -85,7 +88,9 @@ class InTransitSink:
             straggler_timeout=cfg.straggler_timeout,
             max_inflight_bytes=cfg.max_inflight_bytes,
             n_channels=cfg.n_channels, stripe_bytes=cfg.stripe_bytes,
-            credits=cfg.credits)).open()
+            credits=cfg.credits, wire_format=cfg.wire_format,
+            coalesce_bytes=cfg.coalesce_bytes,
+            linger_ms=cfg.linger_ms)).open()
         self._tars: set[str] = set()
         self._pending: list[LoadSubtar] = []  # typed DDL to run at flush
         self._lock = threading.Lock()

@@ -16,6 +16,17 @@ per-byte cost as the one-sided RDMA path). Every stripe ack returns a
 credit grant computed from current memory pressure: when the SAVIME hop
 is slow and tmpfs fills, grants shrink toward 1 and senders stall
 instead of ballooning staging memory.
+
+Small-dataset fast path (DESIGN.md §10): ``hello`` negotiates the bin1
+wire format per connection (stripe / reg_block frames then arrive
+struct-packed and are acked in kind); ``batch_open`` reserves regions
+for N datasets in one round-trip (rolled back as a unit if any
+reservation fails) and the following ``batch_write`` lands the
+concatenated payloads straight into those regions and feeds each
+sub-dataset into the existing finish/forward pipeline — SAVIME ingest is
+unchanged. Connections that speak bin1 also receive proactive ``credit``
+frames when a forward to SAVIME releases staging memory, so stalled
+windows recover without waiting for the next ack.
 """
 from __future__ import annotations
 
@@ -80,7 +91,12 @@ class StagingServer:
         self.stripe_ttl = stripe_ttl
         self.stats = {"datasets": 0, "bytes_in": 0, "bytes_to_savime": 0,
                       "disk_fallbacks": 0, "registrations": 0,
-                      "stripes": 0, "stripe_dups": 0, "stripe_aborts": 0}
+                      "stripes": 0, "stripe_dups": 0, "stripe_aborts": 0,
+                      "batches": 0, "batched_datasets": 0,
+                      "bin_conns": 0, "credit_pushes": 0}
+        # bin1 data connections eligible for proactive credit pushes:
+        # conn -> the send lock shared with its serve thread
+        self._push_conns: dict[socket.socket, threading.Lock] = {}
 
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._srv.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
@@ -161,51 +177,109 @@ class StagingServer:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         with self._conn_lock:
             self._conns.add(conn)
+        # replies and proactive credit pushes may interleave on this
+        # socket from different threads — all sends go through this lock
+        send_lock = threading.Lock()
+        # conn-local protocol state: the reservation ids of the last
+        # successful batch_open, consumed by the next batch_write
+        conn_state: dict = {}
+        # payloads for the generic ops are consumed before the next frame
+        # is read, so their receive buffers are pooled, not per-frame
+        pool = wire.BufferPool(max_per_bucket=2)
+
+        def _reply(reply: dict, is_bin: bool) -> bool:
+            try:
+                with send_lock:
+                    if is_bin:
+                        wire.send_frame_bin(conn, dict(reply, op="ack"))
+                    else:
+                        wire.send_frame(conn, reply)
+            except OSError:
+                return False
+            return True
+
         try:
             with conn:
                 while True:
                     try:
                         header = wire.recv_header(conn)
-                        if header.get("op") == "stripe":
-                            # the stripe handler receives its own payload —
-                            # straight into the mmap'd region at its offset
+                        is_bin = bool(header.pop("_bin", False))
+                        op = header.get("op")
+                        if op in ("stripe", "batch_write"):
+                            # these handlers receive their own payload —
+                            # straight into the mmap'd region(s)
+                            if is_bin and conn not in self._push_conns:
+                                self._register_push_conn(conn, send_lock)
                             try:
-                                reply = self._op_stripe(conn, header)
+                                if op == "stripe":
+                                    reply = self._op_stripe(conn, header)
+                                else:
+                                    reply = self._op_batch_write(
+                                        conn, header, conn_state)
                             except (ConnectionError, OSError):
                                 raise
                             except Exception as e:  # noqa: BLE001
                                 # post-validation failure (e.g. region
-                                # closed by stop() mid-stripe): report it,
-                                # then drop the conn — the payload may not
-                                # be fully consumed, so framing is gone
-                                try:
-                                    wire.send_frame(
-                                        conn,
-                                        {"ok": False, "error": str(e)})
-                                except OSError:
-                                    pass
+                                # closed by stop() mid-transfer): report
+                                # it, then drop the conn — the payload may
+                                # not be fully consumed, so framing is gone
+                                _reply({"ok": False, "error": str(e)},
+                                       is_bin)
                                 return
+                        elif op == "batch_open":
+                            wire.drain_payload(conn, header)
+                            # a prior batch_open whose batch_write never
+                            # arrived is abandoned: release it or its
+                            # reservations leak with no owner
+                            self._abandon_batch(conn_state)
+                            try:
+                                reply = self._op_batch_open(header)
+                                conn_state["batch"] = reply.pop("_ids")
+                            except Exception as e:  # noqa: BLE001
+                                reply = {"ok": False, "error": str(e)}
                         else:
-                            payload = wire.recv_payload(conn, header)
+                            payload = wire.recv_payload(conn, header, pool)
                             try:
                                 reply = self._handle(header, payload)
                             except Exception as e:  # noqa: BLE001
                                 reply = {"ok": False, "error": str(e)}
+                            finally:
+                                # no generic op retains its payload past
+                                # the handler — return the lease
+                                if isinstance(payload, memoryview):
+                                    pool.release(payload)
                     except (ConnectionError, OSError):
                         return
-                    try:
-                        wire.send_frame(conn, reply)
-                    except OSError:
+                    if not _reply(reply, is_bin):
                         return
         finally:
+            # a connection that died between batch_open and batch_write
+            # leaves reservations no client holds a handle to — release
+            # them (the stripe TTL reaper only covers striped datasets)
+            self._abandon_batch(conn_state)
             with self._conn_lock:
                 self._conns.discard(conn)
+                self._push_conns.pop(conn, None)
+
+    def _abandon_batch(self, conn_state: dict) -> None:
+        for fid in conn_state.pop("batch", None) or ():
+            self._release_reservation(fid)
+
+    def _register_push_conn(self, conn: socket.socket, send_lock) -> None:
+        """Mark a bin1 data connection as eligible for proactive credit
+        frames (only bin1 peers understand unsolicited ``credit`` ops)."""
+        with self._conn_lock:
+            if conn not in self._push_conns:
+                self._push_conns[conn] = send_lock
+                self.stats["bin_conns"] += 1
 
     # ------------------------------------------------------------------
     def _handle(self, h: dict, payload) -> dict:
         op = h.get("op")
         if op == "ping":
             return {"ok": True}
+        if op == "hello":
+            return wire.hello_reply(h)
         if op == "write_req":
             return self._op_write_req(h)
         if op == "reg_block":
@@ -254,6 +328,89 @@ class StagingServer:
             self._datasets[file_id] = ds
         return {"ok": True, "file_id": file_id, "path": path,
                 "in_memory": in_memory}
+
+    def _release_reservation(self, file_id: str) -> None:
+        """Undo one ``write_req`` reservation that never finished: close
+        and unlink the region and return its capacity."""
+        with self._ds_lock:
+            ds = self._datasets.pop(file_id, None)
+        if ds is None:
+            return
+        ds.region.close(unlink=True)
+        if ds.in_memory:
+            with self._alloc_lock:
+                self._mem_used -= ds.nbytes
+
+    # -- coalesced small-dataset ingest (DESIGN.md §10) -------------------
+    def _op_batch_open(self, h: dict) -> dict:
+        """Reserve regions for N datasets in one round-trip.
+
+        All-or-nothing: if any reservation fails (capacity, tmpfs error),
+        every region already opened for this batch is closed, unlinked
+        and its capacity returned before the error is reported — a
+        partial batch must not leak reservations that no client holds a
+        handle to.
+        """
+        items = h.get("items")
+        if not isinstance(items, list) or not items:
+            raise ValueError("batch_open needs a non-empty items list")
+        opened: list[dict] = []
+        try:
+            for it in items:
+                opened.append(self._op_write_req(it))
+        except BaseException as e:
+            for rep in opened:
+                self._release_reservation(rep["file_id"])
+            raise RuntimeError(
+                f"batch_open failed at item {len(opened)}/{len(items)} "
+                f"({e}); {len(opened)} reservations rolled back") from e
+        return {"ok": True, "items": opened,
+                "_ids": [rep["file_id"] for rep in opened]}
+
+    def _op_batch_write(self, conn: socket.socket, h: dict,
+                        conn_state: dict) -> dict:
+        """Land one jumbo multi-dataset payload into the regions reserved
+        by the immediately preceding ``batch_open`` on this connection,
+        then feed each sub-dataset into the finish/forward pipeline.
+
+        Any validation failure must drain the declared payload before
+        replying, or the connection's framing desynchronizes (the client
+        pipelines batch_open + batch_write in one vectored send).
+        """
+        ids = conn_state.pop("batch", None)
+        declared = int(h.get("nbytes") or 0)
+        if ids is None:
+            wire.drain_payload(conn, h)
+            return {"ok": False, "error":
+                    "batch_write without a preceding successful batch_open"}
+        with self._ds_lock:
+            dss = [self._datasets.get(fid) for fid in ids]
+        count = int(h.get("count", len(ids)))
+        if any(ds is None for ds in dss) or count != len(ids) \
+                or sum(ds.nbytes for ds in dss) != declared:
+            wire.drain_payload(conn, h)
+            for fid in ids:
+                self._release_reservation(fid)
+            return {"ok": False, "error":
+                    f"batch_write mismatch (count={count}, "
+                    f"declared={declared} bytes)"}
+        done = 0
+        try:
+            for ds in dss:
+                if ds.nbytes:
+                    wire.recv_into(conn, ds.region.view()[:ds.nbytes])
+                self._finish_dataset(ds)
+                done += 1
+        except BaseException:
+            # connection died mid-payload: finished sub-datasets are
+            # already forwarding; the rest must not leak their regions
+            for ds in dss[done:]:
+                self._release_reservation(ds.file_id)
+            raise
+        self.stats["batches"] += 1
+        self.stats["batched_datasets"] += done
+        return {"ok": True, "count": done,
+                "credits": self._credit_grant(4)}
 
     def _op_reg_block(self, h: dict) -> dict:
         with self._ds_lock:
@@ -404,3 +561,28 @@ class StagingServer:
         if ds.in_memory:
             with self._alloc_lock:
                 self._mem_used -= ds.nbytes
+            self._push_credits()
+
+    def _push_credits(self) -> None:
+        """Proactively raise windows on bin1 data connections after a
+        forward released staging memory — a channel stalled at a grant of
+        1 recovers immediately instead of waiting for its next ack (only
+        bin1 peers understand unsolicited ``credit`` frames; JSON
+        channels keep the ack-carried grants)."""
+        with self._conn_lock:
+            targets = list(self._push_conns.items())
+        if not targets:
+            return
+        with self._ds_lock:
+            wanted = max((d.credits_wanted for d in self._datasets.values()
+                          if d.n_stripes is not None and not d.finished),
+                         default=4)
+        grant = self._credit_grant(wanted)
+        for conn, send_lock in targets:
+            try:
+                with send_lock:
+                    wire.send_frame_bin(conn,
+                                        {"op": "credit", "credits": grant})
+                self.stats["credit_pushes"] += 1
+            except OSError:
+                pass          # conn is dying; its serve thread cleans up

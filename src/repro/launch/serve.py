@@ -47,6 +47,13 @@ def main() -> None:
     ap.add_argument("--channels", type=int, default=1,
                     help="stripe egress across N concurrent connections "
                          "with credit-based flow control (1 = off)")
+    ap.add_argument("--wire-format", default="json",
+                    choices=["json", "bin1"],
+                    help="negotiate the struct-packed binary fast path "
+                         "for hot data frames (falls back to json)")
+    ap.add_argument("--coalesce-kb", type=int, default=0,
+                    help="coalesce datasets below this size into jumbo "
+                         "batched frames (KiB, 0 = off)")
     ap.add_argument("--analyzer", default=None,
                     choices=analysis.analyzers.available(),
                     help="summarize staged decode latencies with a "
@@ -82,7 +89,10 @@ def main() -> None:
         sink = InTransitSink(sink_addr,
                              InTransitConfig(tar_prefix="serve",
                                              transport=args.transport,
-                                             n_channels=args.channels))
+                                             n_channels=args.channels,
+                                             wire_format=args.wire_format,
+                                             coalesce_bytes=(
+                                                 args.coalesce_kb << 10)))
 
     key = jax.random.PRNGKey(2)
     with jax.set_mesh(mesh):

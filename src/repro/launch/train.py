@@ -57,6 +57,13 @@ def main() -> None:
     ap.add_argument("--channels", type=int, default=1,
                     help="stripe egress across N concurrent connections "
                          "with credit-based flow control (1 = off)")
+    ap.add_argument("--wire-format", default="json",
+                    choices=["json", "bin1"],
+                    help="negotiate the struct-packed binary fast path "
+                         "for hot data frames (falls back to json)")
+    ap.add_argument("--coalesce-kb", type=int, default=0,
+                    help="coalesce datasets below this size into jumbo "
+                         "batched frames (KiB, 0 = off)")
     ap.add_argument("--compress-pods", action="store_true")
     ap.add_argument("--egress", default="diag",
                     choices=["none", "diag", "grads_int8"])
@@ -86,9 +93,12 @@ def main() -> None:
                      else savime.addr)
         sink = InTransitSink(sink_addr, InTransitConfig(
             io_threads=2, transport=args.transport,
-            n_channels=args.channels))
+            n_channels=args.channels, wire_format=args.wire_format,
+            coalesce_bytes=args.coalesce_kb << 10))
         print(f"[train] in-transit sink --{args.transport}"
-              f"(x{args.channels} channels)--> SAVIME {savime.addr}")
+              f"(x{args.channels} channels, {args.wire_format} wire"
+              f"{', coalescing' if args.coalesce_kb else ''})"
+              f"--> SAVIME {savime.addr}")
 
     ckpt = CheckpointManager(args.ckpt_dir, sink=sink)
     sup = Supervisor(jax.jit(setup.step_fn(), donate_argnums=(0,)), ckpt,

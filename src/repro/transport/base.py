@@ -47,6 +47,9 @@ class TransportConfig:
     n_channels: int = 1                   # striped connections (1 = off)
     stripe_bytes: Optional[int] = None    # stripe size (None = block_size)
     credits: int = 4                      # per-channel credit window request
+    wire_format: str = "json"             # "json" (legacy) | "bin1" fast path
+    coalesce_bytes: int = 0               # datasets below this batch (0 = off)
+    linger_ms: float = 2.0                # coalescing flush window
     extra: dict = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "TransportConfig":

@@ -30,6 +30,18 @@ both the staging server and the copy-emulation servers implement it):
 The server must always grant >= 1 credit: a zero grant with an empty
 pipeline would leave no ack to ever raise it again.
 
+With ``wire_format="bin1"`` (negotiated on the control connection at
+open — the handshake with an old server falls back to JSON) the stripe
+and ack frames ride the struct-packed fast path of
+:mod:`repro.core.wire`, the sender scatter-gathers every credit-admitted
+stripe waiting in its queue into a single ``sendmsg``
+(``send_frames_vectored``), and the receiver honours unsolicited
+``credit`` frames the staging server pushes when a SAVIME forward frees
+memory (window update without consuming an ack). Engines that plug in a
+custom ``send_frame`` (the copy emulations and their 16K-copy + CRC cost
+model) never negotiate binary and never vector — their measured per-frame
+overhead *is* the baseline.
+
 Two data planes per stripe, chosen automatically per dataset:
 
   * **one-sided** — when ``stripe_open`` returns a ``path`` that exists
@@ -159,14 +171,22 @@ class _Stripe:
         self.writer = writer        # RdmaWriter => one-sided data plane
 
 
+_MAX_VECTOR = 64        # frames per sendmsg burst (2 iovecs each, < IOV cap)
+
+
 class _Channel:
     """One connection + sender/receiver thread pair with a credit window."""
 
     def __init__(self, index: int, addr: str, credits: int,
-                 connect: Callable, send_frame: Callable):
+                 connect: Callable, send_frame: Callable,
+                 wire_format: str = wire.WIRE_JSON):
         self.index = index
         self.stats = ChannelStats(channel=index, window=credits)
         self._send_frame = send_frame
+        self._fmt = wire_format
+        # vectored bursts re-encode frames; only safe on the stock frame
+        # writer (a custom send_frame carries an engine's own cost model)
+        self._can_vector = send_frame is wire.send_frame
         self.sock = connect(addr)
         # data channels block until shutdown, not until an idle timeout:
         # an idle receiver parked in recv must not kill a healthy channel
@@ -188,6 +208,61 @@ class _Channel:
         self._receiver.start()
 
     # -- sender ---------------------------------------------------------
+    _ADMITTED, _FAILED, _DEFER = range(3)
+
+    def _admit(self, item, block: bool) -> int:
+        """Acquire one credit for ``item`` (blocking or opportunistic).
+
+        Tri-state so the caller's requeue decision is unambiguous:
+        ``_FAILED`` means the item's transfer was failed here (dead or
+        closing channel — do not requeue); ``_DEFER`` (non-blocking
+        only) means no credit was free and the item is untouched."""
+        t0 = time.perf_counter()
+        with self._cond:
+            if self._dead is None and not self._closing \
+                    and not block and self._unacked >= self._window:
+                return self._DEFER
+            while self._unacked >= self._window and self._dead is None \
+                    and not self._closing:
+                self._cond.wait(0.5)
+            if self._dead is not None or self._closing:
+                item.transfer.fail(
+                    self._dead or ConnectionError("channel closed"))
+                return self._FAILED
+            self._unacked += 1
+            self.stats.peak_unacked = max(self.stats.peak_unacked,
+                                          self._unacked)
+        self.stats.credit_wait_s += time.perf_counter() - t0
+        return self._ADMITTED
+
+    def _release_credit(self) -> None:
+        with self._cond:
+            self._unacked -= 1
+            self._cond.notify_all()
+
+    def _prepare(self, item) -> Optional[tuple]:
+        """Build one stripe frame; performs the one-sided mmap store for
+        sided items. Returns ``(header, payload)`` or None on an
+        item-local failure (credit released, transfer failed)."""
+        header = {"op": "stripe", "file_id": item.file_id,
+                  "name": item.name, "stripe_idx": item.idx,
+                  "n_stripes": item.n_stripes, "offset": item.offset}
+        payload = item.view
+        if item.writer is not None:
+            # one-sided plane: the stripe is a raw mmap store (numpy
+            # copyto releases the GIL, so channels copy concurrently);
+            # only the control frame rides the socket
+            try:
+                item.writer.write(item.offset, item.view)
+            except Exception as e:  # noqa: BLE001 — item-local failure
+                self._release_credit()
+                item.transfer.fail(e)
+                return None
+            header["sided"] = 1
+            header["size"] = len(item.view)
+            payload = None
+        return header, payload
+
     def _send_loop(self) -> None:
         while True:
             item = self.q.get()
@@ -196,38 +271,40 @@ class _Channel:
             if self._dead is not None:
                 item.transfer.fail(self._dead)
                 continue
-            t0 = time.perf_counter()
-            with self._cond:
-                while self._unacked >= self._window and self._dead is None \
-                        and not self._closing:
-                    self._cond.wait(0.5)
-                if self._dead is not None or self._closing:
-                    item.transfer.fail(
-                        self._dead or ConnectionError("channel closed"))
-                    continue
-                self._unacked += 1
-                self.stats.peak_unacked = max(self.stats.peak_unacked,
-                                              self._unacked)
-            self.stats.credit_wait_s += time.perf_counter() - t0
-            header = {"op": "stripe", "file_id": item.file_id,
-                      "name": item.name, "stripe_idx": item.idx,
-                      "n_stripes": item.n_stripes, "offset": item.offset}
-            payload = item.view
-            if item.writer is not None:
-                # one-sided plane: the stripe is a raw mmap store (numpy
-                # copyto releases the GIL, so channels copy concurrently);
-                # only the control frame rides the socket
-                try:
-                    item.writer.write(item.offset, item.view)
-                except Exception as e:  # noqa: BLE001 — item-local failure
-                    with self._cond:
-                        self._unacked -= 1
-                        self._cond.notify_all()
-                    item.transfer.fail(e)
-                    continue
-                header["sided"] = 1
-                header["size"] = len(item.view)
-                payload = None
+            if self._admit(item, block=True) is not self._ADMITTED:
+                continue
+            batch = [item]
+            # opportunistic burst: drain further queued stripes while the
+            # credit window allows, so a run of small stripes becomes one
+            # scatter-gather sendmsg instead of 2 syscalls per stripe
+            if self._can_vector:
+                while len(batch) < _MAX_VECTOR:
+                    try:
+                        nxt = self.q.get_nowait()
+                    except queue.Empty:
+                        break
+                    if nxt is None:           # shutdown sentinel: requeue
+                        self.q.put(None)
+                        break
+                    admitted = self._admit(nxt, block=False)
+                    if admitted is self._DEFER:
+                        # out of credits, item untouched: requeue so it is
+                        # either sent later or failed by the top-of-loop
+                        # dead-check — never silently dropped
+                        self.q.put(nxt)
+                        break
+                    if admitted is self._FAILED:
+                        break
+                    batch.append(nxt)
+            frames = []
+            admitted = []
+            for it in batch:
+                prep = self._prepare(it)
+                if prep is not None:
+                    frames.append(prep)
+                    admitted.append(it)
+            if not frames:
+                continue
             # append before sending: one sender per channel, so deque order
             # matches wire order and the receiver can match acks FIFO.
             # The dead-check must share the inflight lock with _fail's
@@ -236,14 +313,23 @@ class _Channel:
             # untimed sync on it) hangs forever.
             with self._inflight_lock:
                 if self._dead is not None:
-                    with self._cond:
-                        self._unacked -= 1
-                        self._cond.notify_all()
-                    item.transfer.fail(self._dead)
+                    for it in admitted:
+                        self._release_credit()
+                        it.transfer.fail(self._dead)
                     continue
-                self._inflight.append((item, time.perf_counter()))
+                now = time.perf_counter()
+                for it in admitted:
+                    self._inflight.append((it, now))
             try:
-                self._send_frame(self.sock, header, payload)
+                if len(frames) == 1:
+                    header, payload = frames[0]
+                    if self._fmt == wire.WIRE_BIN1:
+                        wire.send_frame_bin(self.sock, header, payload)
+                    else:
+                        self._send_frame(self.sock, header, payload)
+                else:
+                    wire.send_frames_vectored(self.sock, frames,
+                                              fmt=self._fmt)
             except (OSError, ValueError) as e:
                 self._fail(e)
 
@@ -258,6 +344,15 @@ class _Channel:
                 self._fail(e if not self._closing
                            else ConnectionError("channel closed"))
                 return
+            if h.get("op") == "credit":
+                # unsolicited server push (staging memory freed): adopt
+                # the new grant without consuming an ack
+                with self._cond:
+                    self._window = max(1, int(h.get("credits",
+                                                    self._window)))
+                    self.stats.window = self._window
+                    self._cond.notify_all()
+                continue
             with self._inflight_lock:
                 item, t_sent = self._inflight.popleft() if self._inflight \
                     else (None, None)
@@ -334,7 +429,8 @@ class ChannelGroup:
                  credits: int = DEFAULT_CREDITS,
                  connect: Callable = wire.connect,
                  send_frame: Callable = wire.send_frame,
-                 transfer_timeout: float = 300.0):
+                 transfer_timeout: float = 300.0,
+                 wire_format: str = wire.WIRE_JSON):
         if n_channels < 1:
             raise ValueError(f"n_channels must be >= 1, got {n_channels}")
         if stripe_bytes < 1:
@@ -346,6 +442,10 @@ class ChannelGroup:
         self.transfer_timeout = transfer_timeout
         self._connect = connect
         self._send_frame = send_frame
+        # engines with a custom frame writer (copy emulations) keep their
+        # cost model: they never negotiate the binary fast path
+        self.wire_format = wire_format \
+            if send_frame is wire.send_frame else wire.WIRE_JSON
         self._channels: list[_Channel] = []
         self._ctrl = None
         self._ctrl_lock = threading.Lock()
@@ -360,9 +460,14 @@ class ChannelGroup:
         if self._opened:
             return self
         self._ctrl = self._connect(self.addr)
+        if self.wire_format == wire.WIRE_BIN1:
+            # per-connection handshake on the control conn: an old server
+            # answers the unknown hello op with an error and every
+            # connection of this group stays on JSON
+            self.wire_format = wire.negotiate(self._ctrl)
         self._channels = [
             _Channel(i, self.addr, self.credits, self._connect,
-                     self._send_frame)
+                     self._send_frame, wire_format=self.wire_format)
             for i in range(self.n_channels)
         ]
         self._opened = True

@@ -23,6 +23,13 @@ control, and the copy servers reassemble them out of order before
 storing/forwarding. The cost model is preserved at both ends: striped
 sends go through 16K userspace chunk copies + CRC per stripe, and the
 server side receives through the same copied path.
+
+Wire format: the copy emulations are the paper's measured *baselines* —
+they never negotiate the bin1 fast path or coalesce small datasets,
+whatever ``cfg.wire_format`` / ``cfg.coalesce_bytes`` say (a baseline
+that adopts the optimizations under test stops being a baseline). The
+``ChannelGroup`` enforces this whenever a custom ``send_frame`` is
+plugged in, and ``tests/test_wire_coalesce.py`` guards it.
 """
 from __future__ import annotations
 
@@ -300,7 +307,9 @@ class _CopyTransportBase(Transport):
 
     def _make_group(self, addr: str):
         """Striped ChannelGroup against ``addr`` when cfg asks for more
-        than one channel — with the copied-send cost model per stripe."""
+        than one channel — with the copied-send cost model per stripe.
+        ``cfg.wire_format`` is deliberately not forwarded: the custom
+        ``send_frame`` pins the group to JSON (baseline honesty)."""
         if self.cfg.n_channels <= 1:
             return None
         from repro.transport.channels import ChannelGroup

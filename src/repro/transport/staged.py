@@ -47,7 +47,10 @@ class StagedTransport(Transport):
                                  self.cfg.straggler_timeout,
                                  n_channels=self.cfg.n_channels,
                                  stripe_bytes=self.cfg.stripe_bytes,
-                                 credits=self.cfg.credits)
+                                 credits=self.cfg.credits,
+                                 wire_format=self.cfg.wire_format,
+                                 coalesce_bytes=self.cfg.coalesce_bytes,
+                                 linger_ms=self.cfg.linger_ms)
         self._ctrl = wire.connect(addr)
 
     def close(self) -> None:
