@@ -1,0 +1,101 @@
+"""Perf-trajectory regression gate over committed BENCH_*.json snapshots.
+
+Wall-clock numbers do not transfer between machines, so the gate only
+compares *dimensionless ratio metrics* — speedups and capacity multiples
+— which encode "the optimization still works" independent of hardware:
+
+    fig8   speedup_vs_1ch               (striping wins over 1 channel)
+    fig9   speedup_vs_json_uncoalesced  (bin1/coalescing win over legacy)
+    fig10  effective_capacity_x         (dedup capacity multiple)
+           speedup_vs_flat              (paging does not slow ingest)
+
+A current row regresses when its metric drops more than ``--tolerance``
+(default 25%) below the committed snapshot's value; improvements always
+pass. Rows are matched on their identity fields; a row present in the
+snapshot but missing from the current run fails (silent coverage loss).
+
+Usage (CI):
+    python -m benchmarks.fig9_coalesce --smoke --out /tmp/fig9.json
+    python -m benchmarks.check_regression BENCH_fig9.json /tmp/fig9.json
+
+    # refresh a snapshot after an intentional change:
+    python -m benchmarks.check_regression BENCH_fig9.json /tmp/fig9.json \
+        --update
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+# fig -> (identity fields, gated ratio metrics)
+SCHEMAS = {
+    "fig8": (("block_kb", "n_channels"), ("speedup_vs_1ch",)),
+    "fig9": (("ds_kb", "wire", "coalesce"),
+             ("speedup_vs_json_uncoalesced",)),
+    "fig10": (("row", "mode", "dedup"),
+              ("effective_capacity_x", "speedup_vs_flat")),
+}
+
+
+def _key(row: dict):
+    fig = row.get("fig")
+    ident, _ = SCHEMAS.get(fig, ((), ()))
+    return (fig,) + tuple((k, row.get(k)) for k in ident)
+
+
+def check(baseline: list[dict], current: list[dict],
+          tolerance: float) -> list[str]:
+    cur = {_key(r): r for r in current}
+    problems = []
+    for base in baseline:
+        fig = base.get("fig")
+        _, metrics = SCHEMAS.get(fig, ((), ()))
+        key = _key(base)
+        row = cur.get(key)
+        if row is None:
+            problems.append(f"{key}: row missing from current run")
+            continue
+        for m in metrics:
+            if m not in base:
+                continue
+            want, got = float(base[m]), float(row.get(m, 0.0))
+            floor = want * (1.0 - tolerance)
+            if got < floor:
+                problems.append(
+                    f"{key}: {m} regressed {want:.3f} -> {got:.3f} "
+                    f"(floor {floor:.3f} at {tolerance:.0%} tolerance)")
+    return problems
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="committed BENCH_*.json snapshot")
+    ap.add_argument("current", help="rows from the current run (--out)")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional drop in ratio metrics")
+    ap.add_argument("--update", action="store_true",
+                    help="overwrite the snapshot with the current rows "
+                         "instead of gating")
+    args = ap.parse_args()
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"[check_regression] snapshot updated: {args.baseline}")
+        return
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+    problems = check(baseline, current, args.tolerance)
+    for p in problems:
+        print(f"[check_regression] REGRESSION {p}", file=sys.stderr)
+    if problems:
+        sys.exit(1)
+    figs = sorted({r.get("fig") for r in baseline})
+    print(f"[check_regression] OK: {len(baseline)} rows "
+          f"({', '.join(map(str, figs))}) within {args.tolerance:.0%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,5 @@
-"""Shared benchmark utilities: trials with 95% CI, servers, sessions, CSV.
+"""Shared benchmark utilities: trials with 95% CI, servers, sessions,
+CSV, and JSON row snapshots (the perf-trajectory gate's input).
 
 All benchmarks go through the transport registry
 (:mod:`repro.transport`): an engine is only ever named by its registry
@@ -28,10 +29,12 @@ def ci95(xs: list[float]) -> tuple[float, float]:
 
 
 @contextmanager
-def fresh_stack(mem_capacity: int = 4 << 30, send_threads: int = 2):
+def fresh_stack(mem_capacity: int = 4 << 30, send_threads: int = 2,
+                page_bytes: int = 0, spill_dir=None, dedup: bool = False):
     sv = SavimeServer().start()
     st = StagingServer(sv.addr, mem_capacity=mem_capacity,
-                       send_threads=send_threads).start()
+                       send_threads=send_threads, page_bytes=page_bytes,
+                       spill_dir=spill_dir, dedup=dedup).start()
     try:
         yield sv, st
     finally:
@@ -67,3 +70,13 @@ def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row, flush=True)
     return row
+
+
+def write_rows(path: str, rows: list[dict]) -> None:
+    """Persist benchmark rows as pretty JSON (committed as BENCH_*.json
+    snapshots; ``benchmarks.check_regression`` gates ratio metrics
+    against them)."""
+    import json
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1, sort_keys=True)
+        f.write("\n")

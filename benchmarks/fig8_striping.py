@@ -109,6 +109,8 @@ def main() -> None:
                     help="one small cell, single- and 2-channel (CI)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale-ish sizes (slower)")
+    ap.add_argument("--out", default=None,
+                    help="also write the rows to this JSON file")
     args = ap.parse_args()
     if args.smoke:
         rows, total = run(n_files=2, file_mb=2, trials=1, blocks_kb=(1024,),
@@ -121,9 +123,12 @@ def main() -> None:
             sum(c["nbytes"] for c in r["per_channel"]) == total
             for r in striped), rows
     elif args.full:
-        run(n_files=4, file_mb=32, trials=7)
+        rows, _ = run(n_files=4, file_mb=32, trials=7)
     else:
-        run()
+        rows, _ = run()
+    if args.out:
+        from benchmarks.common import write_rows
+        write_rows(args.out, rows)
 
 
 if __name__ == "__main__":

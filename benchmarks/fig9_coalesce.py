@@ -115,6 +115,8 @@ def main() -> None:
                     help="one small-dataset size, all four modes (CI)")
     ap.add_argument("--full", action="store_true",
                     help="paper-scale-ish sizes (slower)")
+    ap.add_argument("--out", default=None,
+                    help="also write the rows to this JSON file")
     args = ap.parse_args()
     if args.smoke:
         rows = run(ds_kb=(64,), trials=3, budget_mb=4)
@@ -131,9 +133,13 @@ def main() -> None:
         assert fast and all(
             r["speedup_vs_json_uncoalesced"] >= 2.0 for r in fast), rows
     elif args.full:
-        run(ds_kb=(16, 64, 256, 1024, 4096, 16384), trials=7, budget_mb=128)
+        rows = run(ds_kb=(16, 64, 256, 1024, 4096, 16384), trials=7,
+                   budget_mb=128)
     else:
-        run()
+        rows = run()
+    if args.out:
+        from benchmarks.common import write_rows
+        write_rows(args.out, rows)
 
 
 if __name__ == "__main__":

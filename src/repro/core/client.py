@@ -24,7 +24,7 @@ import numpy as np
 from repro.core import wire
 from repro.core.blocks import plan_blocks
 from repro.core.queues import FCFSPool, TaskHandle
-from repro.core.rdma import RdmaWriter
+from repro.core.rdma import writer_for_reply
 
 Buf = Union[np.ndarray, bytes, bytearray, memoryview]
 
@@ -103,7 +103,7 @@ class Communicator:
                            "size": nbytes})
         conn = self._conn()
         use_bin = wire.negotiated(conn) == wire.WIRE_BIN1
-        writer = RdmaWriter(h["path"], nbytes)
+        writer = writer_for_reply(h, nbytes)
         try:
             flat = buf.reshape(-1).view(np.uint8)
             for off, size in plan_blocks(nbytes, self.block_size):

@@ -48,6 +48,9 @@ class InTransitConfig:
     wire_format: str = "json"        # "json" (legacy) | "bin1" fast path
     coalesce_bytes: int = 0          # coalesce datasets below this (0 = off)
     linger_ms: float = 2.0           # coalescing flush window
+    page_bytes: int = 0              # paged staging page size (0 = flat)
+    spill_dir: Optional[str] = None  # cold-page spill tier (paged mode)
+    dedup: bool = False              # content-addressed page dedup
 
 
 def quantize_int8_np(x: np.ndarray, block: int) -> tuple[np.ndarray, np.ndarray]:
@@ -90,7 +93,8 @@ class InTransitSink:
             n_channels=cfg.n_channels, stripe_bytes=cfg.stripe_bytes,
             credits=cfg.credits, wire_format=cfg.wire_format,
             coalesce_bytes=cfg.coalesce_bytes,
-            linger_ms=cfg.linger_ms)).open()
+            linger_ms=cfg.linger_ms, page_bytes=cfg.page_bytes,
+            spill_dir=cfg.spill_dir, dedup=cfg.dedup)).open()
         self._tars: set[str] = set()
         self._pending: list[LoadSubtar] = []  # typed DDL to run at flush
         self._lock = threading.Lock()

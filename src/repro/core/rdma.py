@@ -30,6 +30,8 @@ import numpy as np
 class MemoryRegion:
     """Server-side registered memory region backed by a (tmpfs) file."""
 
+    paged = False
+
     def __init__(self, path: str, nbytes: int, create: bool = True):
         self.path = path
         self.nbytes = nbytes
@@ -47,6 +49,16 @@ class MemoryRegion:
 
     def view(self) -> np.ndarray:
         return np.frombuffer(self._mm, dtype=np.uint8)
+
+    def segments(self, offset: int = 0, size: Optional[int] = None) \
+            -> list[np.ndarray]:
+        """Writable views covering a byte range (one contiguous view for
+        a flat region; the paged variant scatters across frames)."""
+        if size is None:
+            size = self.nbytes - offset
+        if size == 0:
+            return []
+        return [self.view()[offset:offset + size]]
 
     def register_block(self, offset: int, size: int) -> dict:
         """On-demand registration (paper: "the server register each block as
@@ -91,6 +103,98 @@ class MemoryRegion:
                 pass
 
 
+class PagedMemoryRegion:
+    """MemoryRegion-compatible facade over a :class:`~repro.core.
+    pagestore.PageStore` page table (DESIGN.md §11).
+
+    The dataset's bytes live in fixed-size pages scattered across the
+    store's arena (and, once sealed and cold, its spill tier); views
+    gather/scatter across the non-contiguous frames.  ``path`` is the
+    *arena* path — a one-sided client maps the arena once and translates
+    dataset offsets through the ``frame_offsets()`` table
+    (:class:`PagedRdmaWriter` is that translation on the client side).
+    """
+
+    paged = True
+
+    def __init__(self, store, table):
+        self.store = store
+        self.table = table
+        self.path = store.arena_path
+        self.nbytes = table.nbytes
+        self._registered: dict[tuple[int, int], str] = {}
+        self._lock = threading.Lock()
+        self._freed = False
+
+    @property
+    def fd(self) -> None:
+        return None          # no flat file: forward gathers page views
+
+    def segments(self, offset: int = 0, size: Optional[int] = None):
+        return self.store.segments(self.table, offset, size)
+
+    def frame_offsets(self) -> list[int]:
+        return self.store.frame_offsets(self.table)
+
+    def register_block(self, offset: int, size: int) -> dict:
+        """On-demand registration, page-granular: populating each frame
+        emulates the pinning cost of ibv_reg_mr exactly like the flat
+        region — just over scattered pages."""
+        if offset < 0 or offset + size > self.nbytes:
+            raise ValueError(f"block [{offset},{offset + size}) outside MR")
+        with self._lock:
+            key = (offset, size)
+            if key not in self._registered:
+                for seg in self.segments(offset, size):
+                    seg[::mmap.PAGESIZE] = seg[::mmap.PAGESIZE]
+                self._registered[key] = secrets.token_hex(4)
+            return {"offset": offset, "size": size,
+                    "rkey": self._registered[key]}
+
+    def deregister_all(self) -> None:
+        with self._lock:
+            self._registered.clear()
+
+    def is_registered(self, offset: int, size: int, rkey: str) -> bool:
+        with self._lock:
+            return self._registered.get((offset, size)) == rkey
+
+    # -- paged lifecycle -------------------------------------------------
+    def seal(self) -> None:
+        """Mark fully received: pages become spillable and dedup-able."""
+        self.store.seal(self.table)
+
+    def pin(self) -> None:
+        self.store.pin(self.table)
+
+    def unpin(self) -> None:
+        self.store.unpin(self.table)
+
+    def page_views(self) -> list:
+        """Gather list for the forward path (pin first)."""
+        return self.store.page_views(self.table)
+
+    def read(self, offset: int = 0, size: Optional[int] = None) -> bytearray:
+        return self.store.read(self.table, offset, size)
+
+    def close(self, unlink: bool = False) -> None:
+        if self._freed:
+            return
+        self._freed = True
+        self.store.free(self.table)
+
+
+def writer_for_reply(h: dict, nbytes: int):
+    """Pick the client-side writer a reservation reply calls for: a
+    paged server ships ``frames`` (its page-translation table) and gets
+    a :class:`PagedRdmaWriter`; a flat one gets :class:`RdmaWriter`."""
+    frames = h.get("frames")
+    if frames is not None:
+        return PagedRdmaWriter(h["path"], int(h["page_bytes"]), frames,
+                               nbytes)
+    return RdmaWriter(h["path"], nbytes)
+
+
 class RdmaWriter:
     """Client-side endpoint for one-sided writes into a remote MR."""
 
@@ -109,4 +213,46 @@ class RdmaWriter:
 
     def close(self) -> None:
         self._view = None  # drop the buffer export before unmapping
+        self._mr.close()
+
+
+class PagedRdmaWriter:
+    """One-sided writer into a *paged* remote MR.
+
+    Maps the server's page arena once and translates dataset offsets to
+    frame offsets through the page table the server shipped at
+    reservation time (``frames``: arena byte offset of each page) — the
+    client-side half of scatter/gather over non-contiguous pages.  Same
+    contract as :class:`RdmaWriter`: raw stores, no server CPU.
+    """
+
+    def __init__(self, path: str, page_bytes: int, frames: list[int],
+                 nbytes: int):
+        if page_bytes < 1:
+            raise ValueError(f"page_bytes must be >= 1, got {page_bytes}")
+        self.page_bytes = page_bytes
+        self.frames = [int(f) for f in frames]
+        self.nbytes = nbytes
+        self._mr = MemoryRegion(path, os.path.getsize(path), create=False)
+        self._view: Optional[np.ndarray] = self._mr.view()
+
+    def write(self, offset: int, buf, rkey: Optional[str] = None) -> int:
+        src = np.frombuffer(buf, dtype=np.uint8) \
+            if not isinstance(buf, np.ndarray) \
+            else buf.reshape(-1).view(np.uint8)
+        if offset < 0 or offset + src.size > self.nbytes:
+            raise ValueError(
+                f"write [{offset},{offset + src.size}) outside MR "
+                f"[0,{self.nbytes})")
+        pos = 0
+        while pos < src.size:
+            idx, in_off = divmod(offset + pos, self.page_bytes)
+            n = min(self.page_bytes - in_off, src.size - pos)
+            dst = self.frames[idx] + in_off
+            np.copyto(self._view[dst:dst + n], src[pos:pos + n])
+            pos += n
+        return src.size
+
+    def close(self) -> None:
+        self._view = None
         self._mr.close()

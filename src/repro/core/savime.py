@@ -365,6 +365,24 @@ class SavimeClient:
         if not header.get("ok"):
             raise SavimeError(header.get("error", "?"))
 
+    def load_dataset_views(self, name: str, dtype: str, views,
+                           count: int) -> None:
+        """Scatter-gather ingest for paged staging (DESIGN.md §11): one
+        vectored send over the dataset's page views — arena slices for
+        resident pages, file bytes for spilled ones — with no user-space
+        concatenation."""
+        total = sum(getattr(v, "nbytes", None) or len(v) for v in views)
+        if total != count:
+            raise SavimeError(
+                f"page views cover {total} bytes, dataset is {count}")
+        with self._lock:
+            wire.sendmsg_all(self._sock, wire.encode_frame(
+                {"op": "load_dataset", "name": name, "dtype": dtype},
+                list(views)))
+            header, _ = wire.recv_frame(self._sock)
+        if not header.get("ok"):
+            raise SavimeError(header.get("error", "?"))
+
     def stats(self) -> dict:
         with self._lock:
             header, _ = wire.request(self._sock, {"op": "stats"})

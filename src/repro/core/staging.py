@@ -39,8 +39,9 @@ import time
 from typing import Optional
 
 from repro.core import wire
+from repro.core.pagestore import PageStore, PageStoreFull
 from repro.core.queues import FCFSPool
-from repro.core.rdma import MemoryRegion
+from repro.core.rdma import MemoryRegion, PagedMemoryRegion
 from repro.core.savime import SavimeClient
 
 
@@ -70,7 +71,10 @@ class StagingServer:
                  send_threads: int = 2,
                  straggler_timeout: Optional[float] = None,
                  auto_subtar: bool = True,
-                 stripe_ttl: float = 300.0):
+                 stripe_ttl: float = 300.0,
+                 page_bytes: int = 0,
+                 spill_dir: Optional[str] = None,
+                 dedup: bool = False):
         self.savime_addr = savime_addr
         uid = f"{os.getpid()}-{secrets.token_hex(3)}"
         self.mem_dir = mem_dir or f"/dev/shm/staging-{uid}"
@@ -79,7 +83,19 @@ class StagingServer:
         os.makedirs(self.disk_dir, exist_ok=True)
         self.mem_capacity = mem_capacity
         self._mem_used = 0
+        self._disk_used = 0
         self._alloc_lock = threading.Lock()
+        # paged staging substrate (DESIGN.md §11): page_bytes > 0 replaces
+        # flat per-dataset tmpfs regions with page tables over one arena
+        # (LRU spill tier + optional content-addressed dedup); 0 keeps the
+        # flat path byte-identical to the original
+        self._store: Optional[PageStore] = None
+        if page_bytes > 0:
+            self._store = PageStore(
+                capacity=mem_capacity, page_bytes=page_bytes,
+                mem_dir=self.mem_dir,
+                spill_dir=spill_dir or os.path.join(self.disk_dir, "spill"),
+                dedup=dedup)
         # _datasets is written by connection threads and popped by send
         # threads — every mutation goes through _ds_lock
         self._ds_lock = threading.Lock()
@@ -145,6 +161,20 @@ class StagingServer:
             datasets = list(self._datasets.values())
         for ds in datasets:
             ds.region.close(unlink=True)
+        if self._store is not None:
+            self._store.close()
+            self._try_rmdir(self._store.spill_dir)
+        self._try_rmdir(self.mem_dir)
+        self._try_rmdir(self.disk_dir)
+
+    @staticmethod
+    def _try_rmdir(path: str) -> None:
+        """Reap a directory this server created, but only when empty —
+        live datasets (or a user-supplied shared dir) keep it."""
+        try:
+            os.rmdir(path)
+        except OSError:
+            pass
 
     def live_threads(self) -> int:
         return sum(t.is_alive() for t in self._threads)
@@ -297,18 +327,43 @@ class StagingServer:
             self.drain(h.get("timeout"))
             return {"ok": True}
         if op == "stats":
-            return {"ok": True, **self.stats,
-                    "mem_used": self._mem_used,
-                    "queued": len(self._datasets)}
+            # snapshot under the owning locks: torn reads here made
+            # monitoring report mutually inconsistent numbers
+            with self._alloc_lock:
+                mem_used = self._mem_used
+                disk_used = self._disk_used
+            with self._ds_lock:
+                queued = len(self._datasets)
+            out = {"ok": True, **self.stats, "mem_used": mem_used,
+                   "disk_used": disk_used, "queued": queued}
+            if self._store is not None:
+                pages = self._store.stats()
+                out["pages"] = pages
+                out["mem_used"] = mem_used + pages["mem_used"]
+                out["disk_used"] = disk_used + pages["spill_used"]
+            return out
         raise ValueError(f"unknown op {op!r}")
 
     def _op_write_req(self, h: dict) -> dict:
         nbytes = int(h["size"])
-        with self._alloc_lock:
-            in_memory = self._mem_used + nbytes <= self.mem_capacity
-            if in_memory:
-                self._mem_used += nbytes
-            else:
+        if self._store is not None:
+            rep = self._open_paged(h, nbytes)
+            if rep is not None:
+                return rep
+            # unsealed demand exceeds the store even after spilling
+            # everything cold — the paper's disk tier takes the overflow
+            in_memory = False
+            with self._alloc_lock:
+                self._disk_used += nbytes
+            self.stats["disk_fallbacks"] += 1
+        else:
+            with self._alloc_lock:
+                in_memory = self._mem_used + nbytes <= self.mem_capacity
+                if in_memory:
+                    self._mem_used += nbytes
+                else:
+                    self._disk_used += nbytes
+            if not in_memory:
                 self.stats["disk_fallbacks"] += 1  # paper: disk as fallback
         file_id = secrets.token_hex(8)
         base = self.mem_dir if in_memory else self.disk_dir
@@ -318,9 +373,11 @@ class StagingServer:
         except BaseException:
             # mmap/ftruncate can fail after the capacity reservation was
             # taken; without the rollback the bytes leak until restart
-            if in_memory:
-                with self._alloc_lock:
+            with self._alloc_lock:
+                if in_memory:
                     self._mem_used -= nbytes
+                else:
+                    self._disk_used -= nbytes
             raise
         ds = _Dataset(file_id, h["name"], h.get("dtype", "uint8"), nbytes,
                       region, in_memory)
@@ -329,6 +386,43 @@ class StagingServer:
         return {"ok": True, "file_id": file_id, "path": path,
                 "in_memory": in_memory}
 
+    def _open_paged(self, h: dict, nbytes: int) -> Optional[dict]:
+        """Reserve a page table for one dataset; ``None`` when unsealed
+        demand exceeds the store (caller falls back to the disk tier).
+
+        The reply carries the address translation for one-sided writers:
+        ``path`` is the page *arena*, ``frames`` the arena byte offset of
+        each page (``PagedRdmaWriter`` scatters through it); reg_block
+        grants stay flat-shaped, so the bin1 wire format is untouched.
+        """
+        try:
+            table = self._store.alloc(nbytes)
+        except PageStoreFull:
+            return None
+        region = PagedMemoryRegion(self._store, table)
+        file_id = secrets.token_hex(8)
+        ds = _Dataset(file_id, h["name"], h.get("dtype", "uint8"), nbytes,
+                      region, True)
+        with self._ds_lock:
+            self._datasets[file_id] = ds
+        return {"ok": True, "file_id": file_id, "path": region.path,
+                "in_memory": True, "page_bytes": self._store.page_bytes,
+                "arena_bytes": self._store.arena_bytes,
+                "frames": region.frame_offsets()}
+
+    def _free_dataset(self, ds: _Dataset) -> None:
+        """Release one dataset's storage and return its accounting — page
+        tables back to the store (which owns frames and spill files), flat
+        regions back to the mem/disk watermark."""
+        ds.region.close(unlink=True)
+        if ds.region.paged:
+            return
+        with self._alloc_lock:
+            if ds.in_memory:
+                self._mem_used -= ds.nbytes
+            else:
+                self._disk_used -= ds.nbytes
+
     def _release_reservation(self, file_id: str) -> None:
         """Undo one ``write_req`` reservation that never finished: close
         and unlink the region and return its capacity."""
@@ -336,10 +430,7 @@ class StagingServer:
             ds = self._datasets.pop(file_id, None)
         if ds is None:
             return
-        ds.region.close(unlink=True)
-        if ds.in_memory:
-            with self._alloc_lock:
-                self._mem_used -= ds.nbytes
+        self._free_dataset(ds)
 
     # -- coalesced small-dataset ingest (DESIGN.md §10) -------------------
     def _op_batch_open(self, h: dict) -> dict:
@@ -397,8 +488,10 @@ class StagingServer:
         done = 0
         try:
             for ds in dss:
-                if ds.nbytes:
-                    wire.recv_into(conn, ds.region.view()[:ds.nbytes])
+                # scatter across the region's segments (one contiguous
+                # view for flat regions, per-page views when paged)
+                for seg in ds.region.segments(0, ds.nbytes):
+                    wire.recv_into(conn, seg)
                 self._finish_dataset(ds)
                 done += 1
         except BaseException:
@@ -430,6 +523,9 @@ class StagingServer:
         it and queue the staging→SAVIME forward."""
         ds.received_at = time.perf_counter()
         ds.region.deregister_all()   # paper: undo registration after sync
+        if ds.region.paged:
+            # fully received: pages become spillable / dedup-able
+            ds.region.seal()
         self.stats["datasets"] += 1
         self.stats["bytes_in"] += ds.nbytes
         self._send_pool.submit(self._send_to_savime, ds,
@@ -491,7 +587,8 @@ class StagingServer:
             return {"ok": True, "stripe_idx": idx, "dup": True,
                     "done": False, "credits": grant}
         if nbytes:
-            wire.recv_into(conn, ds.region.view()[off:off + nbytes])
+            for seg in ds.region.segments(off, nbytes):
+                wire.recv_into(conn, seg)
         if span:
             # on-demand registration per stripe (paper: "the server
             # register each block as needed") — credit-granted rather than
@@ -526,10 +623,7 @@ class StagingServer:
             for ds in stale:
                 self._datasets.pop(ds.file_id, None)
         for ds in stale:
-            ds.region.close(unlink=True)
-            if ds.in_memory:
-                with self._alloc_lock:
-                    self._mem_used -= ds.nbytes
+            self._free_dataset(ds)
             self.stats["stripe_aborts"] += 1
 
     def _credit_grant(self, wanted: int) -> int:
@@ -537,30 +631,48 @@ class StagingServer:
         toward 1 as it fills (a slow SAVIME hop keeps memory occupied, so
         producers stall on credits instead of overrunning the staging
         area). Never 0 — a zero grant with an empty pipeline would leave
-        no ack to ever raise it again."""
-        with self._alloc_lock:
-            used = self._mem_used
-        frac_free = 1.0 - used / self.mem_capacity if self.mem_capacity \
-            else 1.0
+        no ack to ever raise it again.
+
+        Paged mode derives from *available pages* (free frames plus
+        sealed evictable ones): a big cold backlog can always be spilled,
+        so it no longer pins every producer's window to 1 the way the
+        flat watermark did."""
+        if self._store is not None:
+            frac_free = self._store.available_fraction()
+        else:
+            with self._alloc_lock:
+                used = self._mem_used
+            frac_free = 1.0 - used / self.mem_capacity if self.mem_capacity \
+                else 1.0
         return max(1, min(wanted, math.ceil(wanted * max(frac_free, 0.0))))
 
     # -- background forward (FCFS pool) ---------------------------------
     def _send_to_savime(self, ds: _Dataset) -> None:
         try:
             cli = self._savime()
-            cli.load_dataset_from_file(ds.name, ds.dtype, ds.region.fd,
-                                       ds.nbytes)
+            if ds.region.paged:
+                # gather page views (spilled pages stream from disk
+                # without displacing hot frames); pin so the LRU cannot
+                # evict a page out from under the send
+                ds.region.pin()
+                try:
+                    cli.load_dataset_views(ds.name, ds.dtype,
+                                           ds.region.page_views(),
+                                           ds.nbytes)
+                finally:
+                    ds.region.unpin()
+            else:
+                cli.load_dataset_from_file(ds.name, ds.dtype, ds.region.fd,
+                                           ds.nbytes)
         except OSError:
             if self._stop.is_set():
                 return    # stop() already closed the regions mid-forward
             raise
         self.stats["bytes_to_savime"] += ds.nbytes
-        ds.region.close(unlink=True)  # release tmpfs memory (paper §3.2)
         with self._ds_lock:
             self._datasets.pop(ds.file_id, None)
+        self._free_dataset(ds)  # release staging memory (paper §3.2)
         if ds.in_memory:
-            with self._alloc_lock:
-                self._mem_used -= ds.nbytes
             self._push_credits()
 
     def _push_credits(self) -> None:

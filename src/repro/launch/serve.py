@@ -54,6 +54,16 @@ def main() -> None:
     ap.add_argument("--coalesce-kb", type=int, default=0,
                     help="coalesce datasets below this size into jumbo "
                          "batched frames (KiB, 0 = off)")
+    ap.add_argument("--page-kb", type=int, default=0,
+                    help="run staging on the paged store with this page "
+                         "size (KiB, 0 = flat regions); cold pages spill "
+                         "to disk under memory pressure (DESIGN.md §11)")
+    ap.add_argument("--spill-dir", default=None,
+                    help="directory for spilled cold pages (default: a "
+                         "spill/ subdir of the staging disk tier)")
+    ap.add_argument("--dedup", action="store_true",
+                    help="content-addressed page dedup: identical sealed "
+                         "pages stored once (needs --page-kb)")
     ap.add_argument("--analyzer", default=None,
                     choices=analysis.analyzers.available(),
                     help="summarize staged decode latencies with a "
@@ -83,7 +93,10 @@ def main() -> None:
         from repro.core import (InTransitConfig, InTransitSink, SavimeServer,
                                 StagingServer)
         savime = SavimeServer().start()
-        staging = StagingServer(savime.addr).start()
+        staging = StagingServer(savime.addr,
+                                page_bytes=args.page_kb << 10,
+                                spill_dir=args.spill_dir,
+                                dedup=args.dedup).start()
         sink_addr = (staging.addr if args.transport == "rdma_staged"
                      else savime.addr)
         sink = InTransitSink(sink_addr,
@@ -92,7 +105,10 @@ def main() -> None:
                                              n_channels=args.channels,
                                              wire_format=args.wire_format,
                                              coalesce_bytes=(
-                                                 args.coalesce_kb << 10)))
+                                                 args.coalesce_kb << 10),
+                                             page_bytes=args.page_kb << 10,
+                                             spill_dir=args.spill_dir,
+                                             dedup=args.dedup))
 
     key = jax.random.PRNGKey(2)
     with jax.set_mesh(mesh):

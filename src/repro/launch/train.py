@@ -64,6 +64,17 @@ def main() -> None:
     ap.add_argument("--coalesce-kb", type=int, default=0,
                     help="coalesce datasets below this size into jumbo "
                          "batched frames (KiB, 0 = off)")
+    ap.add_argument("--page-kb", type=int, default=0,
+                    help="run staging on the paged store with this page "
+                         "size (KiB, 0 = flat regions); cold pages spill "
+                         "to disk under memory pressure (DESIGN.md §11)")
+    ap.add_argument("--spill-dir", default=None,
+                    help="directory for spilled cold pages (default: a "
+                         "spill/ subdir of the staging disk tier)")
+    ap.add_argument("--dedup", action="store_true",
+                    help="content-addressed page dedup: identical sealed "
+                         "pages (e.g. repeated checkpoint shards) stored "
+                         "once (needs --page-kb)")
     ap.add_argument("--compress-pods", action="store_true")
     ap.add_argument("--egress", default="diag",
                     choices=["none", "diag", "grads_int8"])
@@ -86,7 +97,10 @@ def main() -> None:
     sink = savime = staging = None
     if args.intransit:
         savime = SavimeServer().start()
-        staging = StagingServer(savime.addr).start()
+        staging = StagingServer(savime.addr,
+                                page_bytes=args.page_kb << 10,
+                                spill_dir=args.spill_dir,
+                                dedup=args.dedup).start()
         # the staged path attaches to staging; copy-emulation transports
         # (scp_*, ssh_direct) reach SAVIME directly, as the baselines do
         sink_addr = (staging.addr if args.transport == "rdma_staged"
@@ -94,7 +108,9 @@ def main() -> None:
         sink = InTransitSink(sink_addr, InTransitConfig(
             io_threads=2, transport=args.transport,
             n_channels=args.channels, wire_format=args.wire_format,
-            coalesce_bytes=args.coalesce_kb << 10))
+            coalesce_bytes=args.coalesce_kb << 10,
+            page_bytes=args.page_kb << 10, spill_dir=args.spill_dir,
+            dedup=args.dedup))
         print(f"[train] in-transit sink --{args.transport}"
               f"(x{args.channels} channels, {args.wire_format} wire"
               f"{', coalescing' if args.coalesce_kb else ''})"

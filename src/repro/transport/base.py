@@ -50,6 +50,9 @@ class TransportConfig:
     wire_format: str = "json"             # "json" (legacy) | "bin1" fast path
     coalesce_bytes: int = 0               # datasets below this batch (0 = off)
     linger_ms: float = 2.0                # coalescing flush window
+    page_bytes: int = 0                   # paged staging page size (0 = flat)
+    spill_dir: Optional[str] = None       # cold-page spill tier (paged mode)
+    dedup: bool = False                   # content-addressed page dedup
     extra: dict = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "TransportConfig":
@@ -76,6 +79,9 @@ class TransferStats:
     # per-channel byte/latency breakdowns when the transport stripes over
     # multiple connections (empty on single-connection paths)
     channels: list = dataclasses.field(default_factory=list)
+    # page/spill/dedup counters when the staging area runs the paged
+    # store (cfg.page_bytes > 0); empty on the flat path
+    pages: dict = dataclasses.field(default_factory=dict)
 
     @property
     def staging_gbps(self) -> float:
@@ -149,6 +155,11 @@ class Transport(abc.ABC):
         """Per-channel breakdowns when this transport stripes across
         multiple connections (``cfg.n_channels > 1``); empty otherwise."""
         return []
+
+    def page_stats(self) -> dict:
+        """Page/spill/dedup counters when the staging side runs the paged
+        store (``cfg.page_bytes > 0``); empty otherwise."""
+        return {}
 
 
 # ---------------------------------------------------------------------------

@@ -69,7 +69,7 @@ import numpy as np
 
 from repro.core import wire
 from repro.core.blocks import plan_blocks
-from repro.core.rdma import RdmaWriter
+from repro.core.rdma import RdmaWriter, writer_for_reply
 
 DEFAULT_STRIPE_BYTES = 4 << 20
 DEFAULT_CREDITS = 4
@@ -534,7 +534,7 @@ class ChannelGroup:
         # a locally-reachable region path selects the one-sided data plane
         # (shared emulated-RDMA fabric); otherwise stripes carry payload
         path = h.get("path")
-        writer = RdmaWriter(path, nbytes) \
+        writer = writer_for_reply(h, nbytes) \
             if nbytes and path and os.path.exists(path) else None
         with self._outstanding_cond:
             self._outstanding += 1

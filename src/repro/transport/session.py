@@ -106,6 +106,7 @@ class TransferSession:
             self._closed = True
             return
         self._collect_channel_stats()
+        self._collect_page_stats()
         t = time.perf_counter()
         try:
             self.transport.close()
@@ -246,6 +247,18 @@ class TransferSession:
             return
         if ch:
             self.stats.channels = ch
+
+    def _collect_page_stats(self) -> None:
+        """Snapshot staging-side page/spill/dedup counters into the stats
+        (paged staging only; flat paths report {})."""
+        if self.cfg.page_bytes <= 0:
+            return
+        try:
+            pg = self.transport.page_stats()
+        except Exception:  # noqa: BLE001 — stats must not break egress
+            return
+        if pg:
+            self.stats.pages = pg
 
     def _check_live(self) -> None:
         if not self._opened:

@@ -40,7 +40,10 @@ class StagedTransport(Transport):
             self._staging = StagingServer(
                 self.cfg.savime_addr, mem_capacity=self.cfg.mem_capacity,
                 send_threads=self.cfg.send_threads,
-                straggler_timeout=self.cfg.straggler_timeout).start()
+                straggler_timeout=self.cfg.straggler_timeout,
+                page_bytes=self.cfg.page_bytes,
+                spill_dir=self.cfg.spill_dir,
+                dedup=self.cfg.dedup).start()
             addr = self._staging.addr
         self.comm = Communicator(addr, self.cfg.io_threads,
                                  self.cfg.block_size,
@@ -85,6 +88,13 @@ class StagedTransport(Transport):
 
     def channel_stats(self) -> list[dict]:
         return self.comm.channel_stats() if self.comm is not None else []
+
+    def page_stats(self) -> dict:
+        """Staging-side page/spill/dedup counters (paged store only)."""
+        try:
+            return self._ctrl_request({"op": "stats"}).get("pages") or {}
+        except (RuntimeError, OSError):
+            return {}
 
     def _ctrl_request(self, header: dict) -> dict:
         with self._ctrl_lock:

@@ -1,0 +1,359 @@
+"""Paged staging store (DESIGN.md §11): page-table allocator, LRU spill
+tier and content-addressed dedup — store-level lifecycles under memory
+pressure, the paged variants of all four ingest protocols (block, striped,
+batch, forward), credit derivation from available pages, and the
+accounting fixes that ride along (locked stats snapshot, disk-tier
+cleanup).
+"""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import SavimeServer, StagingServer
+from repro.core import wire
+from repro.core.pagestore import PageStore, PageStoreFull
+from repro.core.rdma import PagedMemoryRegion, PagedRdmaWriter
+from repro.transport import TransferSession, TransportConfig
+
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnraisableExceptionWarning")
+
+PAGE = 16 << 10
+
+
+@pytest.fixture()
+def savime():
+    srv = SavimeServer().start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture()
+def store(tmp_path):
+    st = PageStore(capacity=16 * PAGE, page_bytes=PAGE,
+                   mem_dir=str(tmp_path / "mem"),
+                   spill_dir=str(tmp_path / "spill"), dedup=True)
+    yield st
+    st.close()
+
+
+# ---------------------------------------------------------------------------
+# store-level lifecycles
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_write_read_roundtrip(store):
+    rng = np.random.default_rng(0)
+    data = rng.integers(0, 256, 3 * PAGE + 123, dtype=np.uint8)
+    t = store.alloc(data.size)
+    assert t.n_pages == 4
+    store.write(t, 0, data)
+    assert bytes(store.read(t)) == data.tobytes()
+    # partial range across a page boundary
+    assert bytes(store.read(t, PAGE - 7, 20)) == \
+        data[PAGE - 7:PAGE + 13].tobytes()
+    store.free(t)
+    assert store.stats()["pages_free"] == store.n_frames
+
+
+def test_spill_past_capacity_and_reaccess_byte_exact(store):
+    rng = np.random.default_rng(1)
+    tables = []
+    # 8 tables x 4 pages = 2x the 16-frame store: sealed pages must spill
+    for _ in range(8):
+        buf = rng.integers(0, 256, 4 * PAGE, dtype=np.uint8)
+        t = store.alloc(buf.size)
+        store.write(t, 0, buf)
+        store.seal(t)
+        tables.append((t, buf))
+    s = store.stats()
+    assert s["spill_outs"] > 0 and s["pages_spilled"] > 0
+    # every table round-trips byte-exact, pulling cold pages back in
+    for t, buf in tables:
+        assert bytes(store.read(t)) == buf.tobytes()
+    assert store.stats()["spill_ins"] > 0
+    for t, _ in tables:
+        store.free(t)
+    s = store.stats()
+    assert s["pages_free"] == store.n_frames
+    assert s["pages_spilled"] == 0 and s["spill_used"] == 0
+
+
+def test_unsealed_pages_never_spill_overflow_raises(store):
+    big = store.alloc(16 * PAGE)           # fills the store, unsealed
+    with pytest.raises(PageStoreFull):
+        store.alloc(PAGE)
+    store.free(big)
+    assert store.stats()["pages_free"] == store.n_frames
+
+
+def test_pinned_pages_never_evicted(store):
+    rng = np.random.default_rng(2)
+    buf = rng.integers(0, 256, 4 * PAGE, dtype=np.uint8)
+    t = store.alloc(buf.size)
+    store.write(t, 0, buf)
+    store.seal(t)
+    store.pin(t)                            # forward in progress
+    others = [store.alloc(4 * PAGE) for _ in range(3)]  # exhaust frames
+    with pytest.raises(PageStoreFull):      # pinned + unsealed only
+        store.alloc(PAGE)
+    assert all(p.resident for p in t.pages)
+    store.unpin(t)
+    t2 = store.alloc(PAGE)                  # now evictable again
+    assert store.stats()["spill_outs"] > 0
+    for x in (t, t2, *others):
+        store.free(x)
+
+
+def test_dedup_refcount_survives_duplicate_release(store):
+    rng = np.random.default_rng(3)
+    buf = rng.integers(0, 256, 3 * PAGE + 100, dtype=np.uint8)
+    a = store.alloc(buf.size)
+    store.write(a, 0, buf)
+    store.seal(a)
+    b = store.alloc(buf.size)
+    store.write(b, 0, buf)
+    store.seal(b)                           # collapses onto a's pages
+    s = store.stats()
+    assert s["dedup_hits"] == 4
+    assert s["dedup_saved_bytes"] == buf.size
+    assert b.pages == a.pages
+    store.free(b)                           # one duplicate released...
+    assert bytes(store.read(a)) == buf.tobytes()   # ...survivor intact
+    store.free(a)
+    assert store.stats()["pages_free"] == store.n_frames
+
+
+def test_dedup_spilled_then_freed_reclaims_spill_file(store):
+    rng = np.random.default_rng(4)
+    buf = rng.integers(0, 256, 2 * PAGE, dtype=np.uint8)
+    t = store.alloc(buf.size)
+    store.write(t, 0, buf)
+    store.seal(t)
+    # force t's pages cold by filling the store with fresh sealed data
+    hot = []
+    for _ in range(8):
+        h = store.alloc(2 * PAGE)
+        store.write(h, 0, rng.integers(0, 256, 2 * PAGE, dtype=np.uint8))
+        store.seal(h)
+        hot.append(h)
+    assert store.stats()["pages_spilled"] > 0
+    store.free(t)
+    for h in hot:
+        store.free(h)
+    s = store.stats()
+    assert s["pages_spilled"] == 0 and s["spill_used"] == 0
+
+
+def test_paged_region_one_sided_writer_roundtrip(store):
+    rng = np.random.default_rng(5)
+    payload = rng.integers(0, 256, 2 * PAGE + 500, dtype=np.uint8)
+    t = store.alloc(payload.size)
+    reg = PagedMemoryRegion(store, t)
+    grant = reg.register_block(0, payload.size)
+    w = PagedRdmaWriter(reg.path, store.page_bytes, reg.frame_offsets(),
+                        payload.size)
+    # unaligned split exercises the offset -> frame translation
+    w.write(0, payload[:PAGE + 99])
+    w.write(PAGE + 99, payload[PAGE + 99:], grant["rkey"])
+    w.close()
+    assert bytes(reg.read()) == payload.tobytes()
+    reg.seal()
+    reg.pin()
+    assert b"".join(bytes(v) for v in reg.page_views()) == payload.tobytes()
+    reg.unpin()
+    reg.close(unlink=True)
+
+
+# ---------------------------------------------------------------------------
+# paged staging end-to-end (all ingest protocols)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def paged_staging(savime):
+    srv = StagingServer(savime.addr, mem_capacity=64 * PAGE,
+                        page_bytes=PAGE, send_threads=2).start()
+    yield srv
+    srv.stop()
+
+
+def _verify(savime, bufs):
+    for n, b in bufs.items():
+        got = np.frombuffer(savime.engine.datasets[n], dtype=np.float64)
+        assert np.array_equal(got, b), n
+
+
+def test_paged_block_path_roundtrip(savime, paged_staging):
+    cfg = TransportConfig(staging_addr=paged_staging.addr, io_threads=2,
+                          block_size=2 * PAGE, page_bytes=PAGE)
+    rng = np.random.default_rng(6)
+    bufs = {f"pb{i}": rng.standard_normal(10_000) for i in range(4)}
+    with TransferSession("rdma_staged", cfg) as sess:
+        for n, b in bufs.items():
+            sess.write(n, b, dtype="float64")
+        sess.sync()
+        sess.drain()
+    _verify(savime, bufs)
+    assert sess.stats.pages["pages_total"] == 64
+    assert sess.stats.pages["peak_mem_used"] > 0
+
+
+def test_paged_striped_bin1_roundtrip(savime, paged_staging):
+    cfg = TransportConfig(staging_addr=paged_staging.addr, n_channels=2,
+                          stripe_bytes=int(1.5 * PAGE), wire_format="bin1",
+                          page_bytes=PAGE)
+    rng = np.random.default_rng(7)
+    bufs = {f"ps{i}": rng.standard_normal(12_000) for i in range(4)}
+    with TransferSession("rdma_staged", cfg) as sess:
+        for n, b in bufs.items():
+            sess.write(n, b, dtype="float64")
+        sess.sync()
+        sess.drain()
+    _verify(savime, bufs)
+    assert paged_staging.stats["stripes"] > 0
+
+
+def test_paged_coalesced_batch_roundtrip(savime, paged_staging):
+    cfg = TransportConfig(staging_addr=paged_staging.addr,
+                          coalesce_bytes=1 << 20, page_bytes=PAGE)
+    rng = np.random.default_rng(8)
+    bufs = {f"pc{i}": rng.standard_normal(1500) for i in range(6)}
+    with TransferSession("rdma_staged", cfg) as sess:
+        for n, b in bufs.items():
+            sess.write(n, b, dtype="float64")
+        sess.sync()
+        sess.drain()
+    _verify(savime, bufs)
+    assert paged_staging.stats["batches"] >= 1
+
+
+def test_paged_empty_dataset_completes(savime, paged_staging):
+    cfg = TransportConfig(staging_addr=paged_staging.addr, page_bytes=PAGE)
+    with TransferSession("rdma_staged", cfg) as sess:
+        fut = sess.write("pempty", np.empty(0, dtype=np.uint8))
+        sess.sync()
+        assert fut.done()
+        sess.drain()
+    assert savime.engine.datasets["pempty"].size == 0
+
+
+# ---------------------------------------------------------------------------
+# memory pressure: spill keeps a sustained over-capacity ingest flowing
+# ---------------------------------------------------------------------------
+
+
+def test_sustained_ingest_past_capacity_spills_and_completes(savime):
+    """16 striped datasets against capacity for 4: a slow SAVIME hop
+    builds a sealed backlog that must spill (never stall) — grants stay
+    >= 1 by construction and the transfer completes byte-exact."""
+    ds_bytes = 4 * PAGE
+    staging = StagingServer(savime.addr, mem_capacity=4 * ds_bytes,
+                            page_bytes=PAGE, send_threads=1).start()
+    orig = savime.engine.load_dataset
+
+    def slow_load(name, dtype, payload):
+        time.sleep(0.05)                   # the slow analytical hop
+        orig(name, dtype, payload)
+
+    savime.engine.load_dataset = slow_load
+    rng = np.random.default_rng(9)
+    bufs = {f"press{i}": rng.standard_normal(ds_bytes // 8)
+            for i in range(16)}
+    cfg = TransportConfig(staging_addr=staging.addr, n_channels=2,
+                          stripe_bytes=PAGE, credits=4, page_bytes=PAGE)
+    try:
+        with TransferSession("rdma_staged", cfg) as sess:
+            for n, b in bufs.items():
+                sess.write(n, b, dtype="float64")
+            sess.sync(timeout=60)
+            sess.drain(timeout=60)
+            srv = sess.server_stats()
+        _verify(savime, bufs)
+        assert srv["pages"]["spill_outs"] > 0      # pressure really spilled
+        assert srv["queued"] == 0
+        assert srv["pages"]["mem_used"] == 0       # all frames returned
+    finally:
+        savime.engine.load_dataset = orig
+        staging.stop()
+
+
+def test_credit_grants_recover_after_gc_stale_stripes(savime):
+    staging = StagingServer(savime.addr, mem_capacity=4 * PAGE,
+                            page_bytes=PAGE, stripe_ttl=0.2).start()
+    sock = wire.connect(staging.addr)
+    try:
+        # a client that reserves the whole store and dies silently
+        h, _ = wire.request(sock, {"op": "stripe_open", "name": "dead",
+                                   "dtype": "uint8", "size": 4 * PAGE,
+                                   "n_stripes": 4, "credits": 8})
+        assert h["ok"] and h["credits"] == 1       # store exhausted
+        time.sleep(0.3)                            # age past the TTL
+        # next stripe_open reaps the corpse; grants recover immediately
+        h2, _ = wire.request(sock, {"op": "stripe_open", "name": "live",
+                                    "dtype": "uint8", "size": PAGE,
+                                    "n_stripes": 1, "credits": 8})
+        assert h2["ok"] and h2["credits"] > 1
+        assert staging.stats["stripe_aborts"] >= 1
+    finally:
+        sock.close()
+        staging.stop()
+
+
+# ---------------------------------------------------------------------------
+# accounting fixes (stats snapshot, disk tier cleanup)
+# ---------------------------------------------------------------------------
+
+
+def test_stats_snapshot_keys_and_disk_fallback_cleanup(savime):
+    # flat server sized so the dataset must take the disk tier
+    staging = StagingServer(savime.addr, mem_capacity=1 << 10).start()
+    cfg = TransportConfig(staging_addr=staging.addr)
+    buf = np.random.default_rng(10).standard_normal(8_000)
+    try:
+        with TransferSession("rdma_staged", cfg) as sess:
+            sess.write("diskfall", buf, dtype="float64")
+            sess.sync()
+            sess.drain()
+            srv = sess.server_stats()
+        assert srv["disk_fallbacks"] >= 1
+        # the disk tier owns cleanup now: accounting returns to zero
+        assert srv["disk_used"] == 0 and srv["mem_used"] == 0
+        assert srv["queued"] == 0
+        assert "pages" not in srv              # flat server: no page store
+        got = np.frombuffer(savime.engine.datasets["diskfall"], np.float64)
+        assert np.array_equal(got, buf)
+    finally:
+        staging.stop()
+
+
+def test_paged_overflow_falls_back_to_disk_tier(savime):
+    # store holds 4 pages; an unsealed 8-page dataset must overflow to
+    # the flat disk tier and still round-trip
+    staging = StagingServer(savime.addr, mem_capacity=4 * PAGE,
+                            page_bytes=PAGE).start()
+    cfg = TransportConfig(staging_addr=staging.addr, page_bytes=PAGE)
+    buf = np.random.default_rng(11).standard_normal(PAGE)  # 8 pages worth
+    try:
+        with TransferSession("rdma_staged", cfg) as sess:
+            sess.write("overflow", buf, dtype="float64")
+            sess.sync()
+            sess.drain()
+            srv = sess.server_stats()
+        assert srv["disk_fallbacks"] >= 1
+        assert srv["disk_used"] == 0           # freed after forward
+        got = np.frombuffer(savime.engine.datasets["overflow"], np.float64)
+        assert np.array_equal(got, buf)
+    finally:
+        staging.stop()
+
+
+def test_server_dirs_reaped_on_stop(savime):
+    staging = StagingServer(savime.addr, mem_capacity=4 * PAGE,
+                            page_bytes=PAGE).start()
+    mem_dir, disk_dir = staging.mem_dir, staging.disk_dir
+    staging.stop()
+    assert not os.path.exists(mem_dir)
+    assert not os.path.exists(disk_dir)
