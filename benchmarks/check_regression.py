@@ -8,6 +8,8 @@ compares *dimensionless ratio metrics* — speedups and capacity multiples
     fig9   speedup_vs_json_uncoalesced  (bin1/coalescing win over legacy)
     fig10  effective_capacity_x         (dedup capacity multiple)
            speedup_vs_flat              (paging does not slow ingest)
+    fig11  speedup_vs_proxy             (redirect beats full proxying)
+           spread_min_over_mean         (the ring spreads the ingest)
 
 A current row regresses when its metric drops more than ``--tolerance``
 (default 25%) below the committed snapshot's value; improvements always
@@ -36,6 +38,8 @@ SCHEMAS = {
              ("speedup_vs_json_uncoalesced",)),
     "fig10": (("row", "mode", "dedup"),
               ("effective_capacity_x", "speedup_vs_flat")),
+    "fig11": (("row", "mode", "backends"),
+              ("speedup_vs_proxy", "spread_min_over_mean")),
 }
 
 

@@ -12,7 +12,8 @@ def main() -> None:
 
     from benchmarks import (fig3_blocksize, fig4_threads, fig5_scaling,
                             fig6_baselines, fig7_query_latency,
-                            fig8_striping, fig9_coalesce, roofline)
+                            fig8_striping, fig9_coalesce, fig11_gateway,
+                            roofline)
 
     print("name,us_per_call,derived")
     if args.full:
@@ -24,6 +25,7 @@ def main() -> None:
         fig8_striping.run(n_files=2, file_mb=32, trials=5)
         fig9_coalesce.run(ds_kb=(16, 64, 256, 1024, 4096, 16384), trials=7,
                           budget_mb=128)
+        fig11_gateway.run(n_backends=4, n_datasets=24, ds_kb=1024, trials=5)
     else:
         fig3_blocksize.run(n_clients=2, n_files=4, file_mb=4, trials=3,
                            blocks_kb=(16, 64, 256, 1024, 4096, 16384))
@@ -35,6 +37,7 @@ def main() -> None:
         fig8_striping.run(n_files=2, file_mb=8, trials=3,
                           blocks_kb=(1024, 4096), channels=(1, 2, 4))
         fig9_coalesce.run(ds_kb=(16, 64, 16384), trials=3, budget_mb=16)
+        fig11_gateway.run(n_backends=3, n_datasets=9, ds_kb=256, trials=2)
     roofline.run()
 
 

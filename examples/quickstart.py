@@ -74,4 +74,34 @@ print(f"analysis: {an.stats.n_queries} queries, "
       f"mean {an.stats.mean_query_s * 1e3:.2f} ms, kinds {an.stats.by_kind}")
 staging.stop()
 savime.stop()
+
+# --- the same pipeline against a 3-server staging pool (DESIGN.md §12) ---
+# One gateway address fronts N (staging, SAVIME) pairs: datasets place
+# onto backends by consistent hash, and a RouterSession answers one
+# query over the sharded tar exactly as a single server would.
+from repro.gateway import RouterSession, StagingPool  # noqa: E402
+
+width = ny * ny
+parts = {f"slab{i}": np.random.default_rng(i).standard_normal(width)
+         for i in range(6)}
+with StagingPool(3, mem_capacity=1 << 30) as pool:
+    cfg = TransportConfig(gateway_addr=pool.addr)
+    with TransferSession("rdma_staged", cfg) as st:
+        st.run_savime(f'create_tar(field, "x:0:{6 * width - 1}", '
+                      f'"v:float64")')
+        for name, arr in parts.items():
+            st.write(name, arr)
+        st.sync()
+        st.drain()
+        for i, name in enumerate(parts):
+            st.run_savime(f'load_subtar(field, {name}, "{width * i}", '
+                          f'"{width}", v)')
+        with RouterSession(gateway_addr=pool.addr) as router:
+            total = router.execute(tar("field").attr("v").sum())
+    expect = float(np.sum(np.concatenate(list(parts.values()))))
+    assert total.value == expect, (total.value, expect)
+    print(f"pool: {len(parts)} datasets sharded over 3 backends; "
+          f"sum(v) = {total.value:.6f} (numpy: {expect:.6f})")
+    gw = st.stats.gateway
+    print(f"gateway: {gw['totals']} across {gw['live_backends']} backends")
 print("OK")

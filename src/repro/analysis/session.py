@@ -80,6 +80,30 @@ class AnalysisStats:
         d["mean_query_s"] = self.mean_query_s
         return d
 
+    @classmethod
+    def merge(cls, stats) -> "AnalysisStats":
+        """Combine per-session accounting into one reader-fleet view.
+
+        Everything here is a flow (counts, summed query seconds, result
+        bytes) so every field adds — unlike
+        :meth:`TransferStats.merge`, no field is a high-water mark.
+        ``by_kind`` histograms add key-wise; endpoints join with ``+``.
+        """
+        stats = list(stats)
+        if not stats:
+            return cls(endpoint="merged")
+        endpoints = [s.endpoint for s in stats if s.endpoint]
+        out = cls(endpoint="+".join(dict.fromkeys(endpoints)) or "merged")
+        for s in stats:
+            out.n_queries += s.n_queries
+            out.n_retries += s.n_retries
+            out.n_reconnects += s.n_reconnects
+            out.query_s += s.query_s
+            out.result_bytes += s.result_bytes
+            for k, v in s.by_kind.items():
+                out.by_kind[k] = out.by_kind.get(k, 0) + v
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
 class SubtarEvent:

@@ -16,6 +16,7 @@ low-level engine room the staged transport drives directly.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Optional, Union
 
@@ -51,7 +52,8 @@ class Communicator:
                  straggler_timeout: Optional[float] = None,
                  n_channels: int = 1, stripe_bytes: Optional[int] = None,
                  credits: int = 4, wire_format: str = wire.WIRE_JSON,
-                 coalesce_bytes: int = 0, linger_ms: float = 2.0):
+                 coalesce_bytes: int = 0, linger_ms: float = 2.0,
+                 gateway: bool = False, tenant: Optional[str] = None):
         if wire_format not in wire.SUPPORTED_WIRE:
             raise ValueError(f"unknown wire_format {wire_format!r}; "
                              f"supported: {', '.join(wire.SUPPORTED_WIRE)}")
@@ -62,19 +64,29 @@ class Communicator:
         self._socks = wire.ConnCache()   # one conn (≈ RC QP) per I/O thread
         self._channels = None
         self._coalescer = None
+        self._gateway = None
+        if gateway:
+            # redirect protocol (DESIGN.md §12): one control RTT per
+            # dataset resolves placement + tenancy; data goes straight
+            # to the admitted backend, never through the gateway
+            from repro.gateway.client import GatewayClient
+            self._gateway = GatewayClient(addr, tenant=tenant)
         if coalesce_bytes > 0:
             # imported lazily: repro.transport imports this module
             from repro.transport.coalesce import Coalescer
             self._coalescer = Coalescer(self._flush_batch, coalesce_bytes,
                                         linger_ms=linger_ms)
+        self._channel_opts = {"n_channels": n_channels,
+                              "stripe_bytes": stripe_bytes or block_size,
+                              "credits": credits, "wire_format": wire_format}
+        self._groups: dict[str, object] = {}   # backend addr -> ChannelGroup
+        self._groups_lock = threading.Lock()
         if n_channels > 1:
             # striped mode bypasses the I/O pool entirely — don't start
-            # worker threads that would only ever idle
-            from repro.transport.channels import ChannelGroup
-            self._channels = ChannelGroup(
-                addr, n_channels=n_channels,
-                stripe_bytes=stripe_bytes or block_size,
-                credits=credits, wire_format=wire_format).open()
+            # worker threads that would only ever idle. Behind a gateway
+            # the groups open lazily per admitted backend instead.
+            if not gateway:
+                self._channels = self._group_for(addr)
         else:
             self._pool = FCFSPool(io_threads, "libstaging-io",
                                   straggler_timeout=straggler_timeout)
@@ -86,22 +98,38 @@ class Communicator:
             wire.negotiate(sock)
         return sock
 
-    def _conn(self):
-        return self._socks.get(self.addr, factory=self._connect)
+    def _conn(self, addr: Optional[str] = None):
+        return self._socks.get(addr or self.addr, factory=self._connect)
 
-    def _request(self, header: dict, payload=None) -> dict:
-        h, _ = wire.request(self._conn(), header, payload)
+    def _group_for(self, addr: str):
+        """Get-or-open the striped ChannelGroup bound to ``addr`` (one
+        per backend when a gateway spreads datasets across a pool)."""
+        with self._groups_lock:
+            grp = self._groups.get(addr)
+            if grp is None:
+                from repro.transport.channels import ChannelGroup
+                grp = ChannelGroup(addr, **self._channel_opts).open()
+                self._groups[addr] = grp
+            return grp
+
+    def _request(self, header: dict, payload=None,
+                 addr: Optional[str] = None) -> dict:
+        h, _ = wire.request(self._conn(addr), header, payload)
         if not h.get("ok"):
-            raise RuntimeError(f"staging error: {h.get('error')}")
+            from repro.gateway.tenancy import error_from_reply
+            raise error_from_reply(h, "staging error")
         return h
 
     # -- the transfer task (runs on an I/O thread) -----------------------
-    def _send(self, name: str, dtype: str, buf: np.ndarray) -> int:
+    def _send(self, name: str, dtype: str, buf: np.ndarray,
+              addr: Optional[str] = None) -> int:
         nbytes = buf.nbytes
+        if addr is None and self._gateway is not None:
+            addr = self._gateway.admit(name, nbytes)
         # NB: "nbytes" is reserved by the wire framing; use "size"
         h = self._request({"op": "write_req", "name": name, "dtype": dtype,
-                           "size": nbytes})
-        conn = self._conn()
+                           "size": nbytes}, addr=addr)
+        conn = self._conn(addr)
         use_bin = wire.negotiated(conn) == wire.WIRE_BIN1
         writer = writer_for_reply(h, nbytes)
         try:
@@ -117,23 +145,22 @@ class Communicator:
                         raise RuntimeError(
                             f"staging error: {grant.get('error')}")
                 else:
-                    grant = self._request(hdr)
+                    grant = self._request(hdr, addr=addr)
                 # ...then one-sided RDMA write, no server CPU involved
                 writer.write(grant["offset"], flat[off:off + size],
                              grant["rkey"])
             # two-sided sync message: no more remote ops on this MR
-            self._request({"op": "client_sync", "file_id": h["file_id"]})
+            self._request({"op": "client_sync", "file_id": h["file_id"]},
+                          addr=addr)
         finally:
             writer.close()
         return nbytes
 
     # -- the coalesced batch flush (runs on the coalescer worker) --------
-    def _flush_batch(self, items) -> None:
-        """One round-trip for N small datasets: pipelined ``batch_open``
-        (reservations) + ``batch_write`` (jumbo payload), pushed in a
-        single vectored ``sendmsg`` — nothing is concatenated in user
-        space, the payload iovec list is the item buffers themselves."""
-        sock = self._conn()       # coalescer worker gets its own cached conn
+    def _flush_one_batch(self, sock, items) -> None:
+        """Pipelined ``batch_open`` + ``batch_write`` against one server,
+        pushed in a single vectored ``sendmsg`` — nothing is concatenated
+        in user space, the payload iovec list is the item buffers."""
         open_hdr = {"op": "batch_open",
                     "items": [{"name": it.name, "dtype": it.dtype,
                                "size": it.nbytes} for it in items]}
@@ -149,12 +176,29 @@ class Communicator:
         if not wh.get("ok"):
             raise RuntimeError(f"batch_write failed: {wh.get('error')}")
 
+    def _flush_batch(self, items) -> None:
+        """One round-trip for N small datasets (two behind a gateway:
+        ``admit_batch`` resolves tenancy + placement for the whole batch
+        first, then one vectored flush per admitted backend)."""
+        if self._gateway is None:
+            self._flush_one_batch(self._conn(), items)
+            return
+        # all-or-nothing admission: a quota rejection fails every item's
+        # future before any backend sees a byte
+        addrs = self._gateway.admit_batch([(it.name, it.nbytes)
+                                           for it in items])
+        by_addr: dict[str, list] = {}
+        for addr, it in zip(addrs, items):
+            by_addr.setdefault(addr, []).append(it)
+        for addr, group in by_addr.items():
+            self._flush_one_batch(self._conn(addr), group)
+
     def submit(self, name: str, dtype: str, buf: np.ndarray) -> TaskHandle:
         if self._coalescer is not None and \
                 buf.nbytes < self._coalescer.coalesce_bytes:
             flat = buf.reshape(-1).view(np.uint8)
             return self._coalescer.add(name, dtype, flat, buf.nbytes)
-        if self._channels is not None:
+        if self._channel_opts["n_channels"] > 1:
             # striped mode bypasses the I/O pool entirely: stripes are
             # enqueued onto the channels right away and datasets pipeline
             # back-to-back (no per-dataset drain between transfers); the
@@ -163,7 +207,16 @@ class Communicator:
                            name=f"write-{name}")
             h.started_at = time.perf_counter()
             h.attempts = 1
-            tr = self._channels.submit_dataset(name, dtype, buf)
+            if self._gateway is not None:
+                try:
+                    group = self._group_for(
+                        self._gateway.admit(name, buf.nbytes))
+                except Exception as e:  # noqa: BLE001 — typed quota/auth
+                    h.complete(error=e)
+                    return h
+            else:
+                group = self._channels
+            tr = group.submit_dataset(name, dtype, buf)
             tr.add_done_callback(
                 lambda t, h=h: h.complete(result=t.nbytes)
                 if t.error is None else h.complete(error=t.error))
@@ -171,12 +224,16 @@ class Communicator:
         return self._pool.submit(self._send, name, dtype, buf,
                                  name=f"write-{name}")
 
+    def _all_groups(self) -> list:
+        with self._groups_lock:
+            return list(self._groups.values())
+
     def sync(self, timeout: Optional[float] = None) -> None:
         if self._coalescer is not None:
             self._coalescer.sync(timeout)
-        if self._channels is not None:
-            self._channels.sync(timeout)
-        else:
+        for grp in self._all_groups():
+            grp.sync(timeout)
+        if self._pool is not None:
             self._pool.sync(timeout)
 
     def stop(self) -> None:
@@ -185,11 +242,16 @@ class Communicator:
         if self._pool is not None:
             self._pool.stop()            # joins in-flight transfers first
         self._socks.close_all()          # per-thread QPs die with the pool
-        if self._channels is not None:
-            self._channels.close()       # drains in-flight stripes first
+        for grp in self._all_groups():
+            grp.close()                  # drains in-flight stripes first
+        if self._gateway is not None:
+            self._gateway.close()
 
     def channel_stats(self) -> list[dict]:
-        return self._channels.channel_stats() if self._channels else []
+        out: list[dict] = []
+        for grp in self._all_groups():
+            out.extend(grp.channel_stats())
+        return out
 
 
 class StagingClient:

@@ -51,6 +51,8 @@ class InTransitConfig:
     page_bytes: int = 0              # paged staging page size (0 = flat)
     spill_dir: Optional[str] = None  # cold-page spill tier (paged mode)
     dedup: bool = False              # content-addressed page dedup
+    gateway: bool = False            # addr is a staging gateway (pool mode)
+    tenant: Optional[str] = None     # tenant token for gateway auth
 
 
 def quantize_int8_np(x: np.ndarray, block: int) -> tuple[np.ndarray, np.ndarray]:
@@ -84,9 +86,11 @@ class InTransitSink:
     def __init__(self, addr: str, cfg: InTransitConfig = InTransitConfig()):
         self.cfg = cfg
         staged = cfg.transport == "rdma_staged"
+        gateway = staged and cfg.gateway
         self.session = TransferSession(cfg.transport, TransportConfig(
-            staging_addr=addr if staged else None,
+            staging_addr=addr if staged and not gateway else None,
             savime_addr=None if staged else addr,
+            gateway_addr=addr if gateway else None, tenant=cfg.tenant,
             io_threads=cfg.io_threads, block_size=cfg.block_size,
             straggler_timeout=cfg.straggler_timeout,
             max_inflight_bytes=cfg.max_inflight_bytes,

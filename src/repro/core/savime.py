@@ -140,6 +140,16 @@ class SavimeEngine:
         hi_t = tuple(int(x) for x in hi.split(",")) if hi else None
         return t.aggregate(attr, op, lo_t, hi_t)
 
+    def _q_data_box(self, tar: str):
+        """Loaded bounding box ``[lo, hi]`` (inclusive), or None when the
+        TAR holds no subtars — the scatter-gather router unions these to
+        resolve unbounded queries to the same clip box a single server
+        would use (DESIGN.md §12)."""
+        box = self._tar(tar).data_box()
+        if box is None:
+            return None
+        return [list(box[0]), list(box[1])]
+
     def _q_drop_tar(self, name: str) -> str:
         with self._lock:
             self.tars.pop(name, None)

@@ -109,7 +109,7 @@ class StagingServer:
                       "disk_fallbacks": 0, "registrations": 0,
                       "stripes": 0, "stripe_dups": 0, "stripe_aborts": 0,
                       "batches": 0, "batched_datasets": 0,
-                      "bin_conns": 0, "credit_pushes": 0}
+                      "bin_conns": 0, "credit_pushes": 0, "conns": 0}
         # bin1 data connections eligible for proactive credit pushes:
         # conn -> the send lock shared with its serve thread
         self._push_conns: dict[socket.socket, threading.Lock] = {}
@@ -120,7 +120,11 @@ class StagingServer:
         self._srv.listen(128)
         self.addr = f"{host}:{self._srv.getsockname()[1]}"
         self._stop = threading.Event()
+        # _threads is appended by the accept loop and walked by stop();
+        # both sides hold _threads_lock (an unlocked prune-while-join
+        # race used to drop serve threads from stop()'s view)
         self._threads: list[threading.Thread] = []
+        self._threads_lock = threading.Lock()
         self._conns: set[socket.socket] = set()
         self._conn_lock = threading.Lock()
         self._accept_thread: Optional[threading.Thread] = None
@@ -154,9 +158,12 @@ class StagingServer:
         if self._accept_thread is not None:
             self._accept_thread.join(join_timeout)
         deadline = time.monotonic() + join_timeout
-        for t in self._threads:
+        with self._threads_lock:
+            threads = list(self._threads)
+        for t in threads:
             t.join(max(deadline - time.monotonic(), 0.0))
-        self._threads = [t for t in self._threads if t.is_alive()]
+        with self._threads_lock:
+            self._threads = [t for t in self._threads if t.is_alive()]
         with self._ds_lock:
             datasets = list(self._datasets.values())
         for ds in datasets:
@@ -177,7 +184,8 @@ class StagingServer:
             pass
 
     def live_threads(self) -> int:
-        return sum(t.is_alive() for t in self._threads)
+        with self._threads_lock:
+            return sum(t.is_alive() for t in self._threads)
 
     def drain(self, timeout: Optional[float] = None) -> None:
         """Block until the send queue is empty (staging→SAVIME finished)."""
@@ -197,11 +205,20 @@ class StagingServer:
                 conn, _ = self._srv.accept()
             except OSError:
                 return
-            self._threads = [t for t in self._threads if t.is_alive()]
-            t = threading.Thread(target=self._serve, args=(conn,),
-                                 name="staging-conn", daemon=True)
-            t.start()
-            self._threads.append(t)
+            if self._stop.is_set():
+                # raced stop(): it already shut the conns it could see —
+                # serving this one would leave a thread stop() never joins
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                return
+            with self._threads_lock:
+                self._threads = [t for t in self._threads if t.is_alive()]
+                t = threading.Thread(target=self._serve, args=(conn,),
+                                     name="staging-conn", daemon=True)
+                t.start()
+                self._threads.append(t)
 
     def _serve(self, conn: socket.socket) -> None:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -228,6 +245,7 @@ class StagingServer:
                 return False
             return True
 
+        counted = False   # probe-only conns (ping/stats) stay uncounted
         try:
             with conn:
                 while True:
@@ -235,6 +253,11 @@ class StagingServer:
                         header = wire.recv_header(conn)
                         is_bin = bool(header.pop("_bin", False))
                         op = header.get("op")
+                        if not counted and op not in ("ping", "stats"):
+                            # a health prober that only ever pings must not
+                            # inflate the data-connection total
+                            self.stats["conns"] += 1
+                            counted = True
                         if op in ("stripe", "batch_write"):
                             # these handlers receive their own payload —
                             # straight into the mmap'd region(s)
@@ -335,7 +358,9 @@ class StagingServer:
             with self._ds_lock:
                 queued = len(self._datasets)
             out = {"ok": True, **self.stats, "mem_used": mem_used,
-                   "disk_used": disk_used, "queued": queued}
+                   "disk_used": disk_used, "queued": queued,
+                   "mem_capacity": self.mem_capacity,
+                   "free_fraction": self.free_fraction()}
             if self._store is not None:
                 pages = self._store.stats()
                 out["pages"] = pages
@@ -637,14 +662,18 @@ class StagingServer:
         sealed evictable ones): a big cold backlog can always be spilled,
         so it no longer pins every producer's window to 1 the way the
         flat watermark did."""
-        if self._store is not None:
-            frac_free = self._store.available_fraction()
-        else:
-            with self._alloc_lock:
-                used = self._mem_used
-            frac_free = 1.0 - used / self.mem_capacity if self.mem_capacity \
-                else 1.0
+        frac_free = self.free_fraction()
         return max(1, min(wanted, math.ceil(wanted * max(frac_free, 0.0))))
+
+    def free_fraction(self) -> float:
+        """The credit machinery's pressure signal, also exported through
+        the ``stats`` op so a gateway can cap fleet-wide admission on the
+        most-pressured backend."""
+        if self._store is not None:
+            return self._store.available_fraction()
+        with self._alloc_lock:
+            used = self._mem_used
+        return 1.0 - used / self.mem_capacity if self.mem_capacity else 1.0
 
     # -- background forward (FCFS pool) ---------------------------------
     def _send_to_savime(self, ds: _Dataset) -> None:

@@ -1,0 +1,26 @@
+"""Multi-tenant staging gateway (DESIGN.md §12).
+
+One address fronting a pool of staging servers: consistent-hash
+placement (:mod:`~repro.gateway.ring`), tenancy + admission
+(:mod:`~repro.gateway.tenancy`), redirect/proxy wire front
+(:mod:`~repro.gateway.server`), scatter-gather analytical routing
+(:mod:`~repro.gateway.router`), and the :class:`StagingPool` harness.
+"""
+from repro.gateway.client import GatewayClient
+from repro.gateway.pool import StagingPool
+from repro.gateway.ring import DEFAULT_VNODES, HashRing, RingNode
+from repro.gateway.router import (MultiSubscription, RouterSession,
+                                  gather_aggregate, gather_select,
+                                  merge_histograms, route_query)
+from repro.gateway.server import Backend, GatewayServer
+from repro.gateway.tenancy import (AuthError, QuotaExceededError, Tenant,
+                                   TenantRegistry, error_from_reply,
+                                   error_reply)
+
+__all__ = [
+    "AuthError", "Backend", "DEFAULT_VNODES", "GatewayClient",
+    "GatewayServer", "HashRing", "MultiSubscription", "QuotaExceededError",
+    "RingNode", "RouterSession", "StagingPool", "Tenant", "TenantRegistry",
+    "error_from_reply", "error_reply", "gather_aggregate", "gather_select",
+    "merge_histograms", "route_query",
+]

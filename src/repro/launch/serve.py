@@ -68,9 +68,22 @@ def main() -> None:
                     choices=analysis.analyzers.available(),
                     help="summarize staged decode latencies with a "
                          "registered analyzer (needs --intransit)")
+    ap.add_argument("--pool", type=int, default=0,
+                    help="run N staging backends behind one gateway "
+                         "(DESIGN.md §12; 0 = single staging server)")
+    ap.add_argument("--tenant", default=None, metavar="NAME[:TOKEN]",
+                    help="gateway tenant to write as (needs --pool); "
+                         "NAME:TOKEN registers the tenant with that token")
+    ap.add_argument("--quota-mb", type=int, default=0,
+                    help="per-tenant byte quota in MiB (needs --pool; "
+                         "0 = unlimited)")
     args = ap.parse_args()
     if args.analyzer and not args.intransit:
         ap.error("--analyzer requires --intransit")
+    if (args.tenant or args.quota_mb) and not args.pool:
+        ap.error("--tenant/--quota-mb require --pool")
+    if args.pool and args.transport != "rdma_staged":
+        ap.error("--pool requires the rdma_staged transport")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -88,17 +101,39 @@ def main() -> None:
     prefill = jax.jit(setup.prefill_fn(max_len=S + N))
     decode = jax.jit(setup.decode_fn(), donate_argnums=(1,))
 
-    sink = staging = savime = None
+    sink = staging = savime = pool = None
+    tenant_token = None
     if args.intransit:
         from repro.core import (InTransitConfig, InTransitSink, SavimeServer,
                                 StagingServer)
-        savime = SavimeServer().start()
-        staging = StagingServer(savime.addr,
-                                page_bytes=args.page_kb << 10,
-                                spill_dir=args.spill_dir,
-                                dedup=args.dedup).start()
-        sink_addr = (staging.addr if args.transport == "rdma_staged"
-                     else savime.addr)
+        if args.pool:
+            from repro.gateway import StagingPool, Tenant
+            tenants = ()
+            quota = (args.quota_mb << 20) or None
+            if args.tenant:
+                name, _, token = args.tenant.partition(":")
+                tenant_token = token or name
+                tenants = (Tenant(name, token=token or None,
+                                  quota_bytes=quota),)
+            pool = StagingPool(args.pool,
+                               tenants=tenants,
+                               default_quota_bytes=None if args.tenant
+                               else quota,
+                               staging_kwargs={
+                                   "page_bytes": args.page_kb << 10,
+                                   "spill_dir": args.spill_dir,
+                                   "dedup": args.dedup}).start()
+            sink_addr = pool.addr
+            print(f"[serve] staging pool: {args.pool} backends behind "
+                  f"gateway {pool.addr}")
+        else:
+            savime = SavimeServer().start()
+            staging = StagingServer(savime.addr,
+                                    page_bytes=args.page_kb << 10,
+                                    spill_dir=args.spill_dir,
+                                    dedup=args.dedup).start()
+            sink_addr = (staging.addr if args.transport == "rdma_staged"
+                         else savime.addr)
         sink = InTransitSink(sink_addr,
                              InTransitConfig(tar_prefix="serve",
                                              transport=args.transport,
@@ -108,7 +143,9 @@ def main() -> None:
                                                  args.coalesce_kb << 10),
                                              page_bytes=args.page_kb << 10,
                                              spill_dir=args.spill_dir,
-                                             dedup=args.dedup))
+                                             dedup=args.dedup,
+                                             gateway=bool(args.pool),
+                                             tenant=tenant_token))
 
     key = jax.random.PRNGKey(2)
     with jax.set_mesh(mesh):
@@ -148,7 +185,12 @@ def main() -> None:
     if sink is not None:
         sink.flush()
         if args.analyzer:
-            with analysis.AnalysisSession(savime.addr) as an:
+            if pool is not None:
+                from repro.gateway import RouterSession
+                an_ctx = RouterSession(gateway_addr=pool.addr)
+            else:
+                an_ctx = analysis.AnalysisSession(savime.addr)
+            with an_ctx as an:
                 res = an.execute(
                     analysis.tar("serve_decode_ms").attr("v").select())
                 a = analysis.analyzers.create(args.analyzer)
@@ -157,8 +199,16 @@ def main() -> None:
                 print(f"[serve] analyzer[{s.analyzer}] over "
                       f"{res.shape} staged latencies: {s.payload}")
         sink.close()
-        staging.stop()
-        savime.stop()
+        if pool is not None:
+            gw = sink.session.stats.gateway
+            if gw:
+                print(f"[serve] gateway: {gw['totals']} across "
+                      f"{gw['live_backends']}/{gw['n_backends']} backends; "
+                      f"tenants: {gw['tenants']}")
+            pool.stop()
+        else:
+            staging.stop()
+            savime.stop()
 
 
 if __name__ == "__main__":

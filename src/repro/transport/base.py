@@ -53,6 +53,9 @@ class TransportConfig:
     page_bytes: int = 0                   # paged staging page size (0 = flat)
     spill_dir: Optional[str] = None       # cold-page spill tier (paged mode)
     dedup: bool = False                   # content-addressed page dedup
+    gateway_addr: Optional[str] = None    # staging gateway (DESIGN.md §12);
+    #                                       set => data admits via the pool
+    tenant: Optional[str] = None          # tenant token for gateway auth
     extra: dict = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "TransportConfig":
@@ -82,6 +85,9 @@ class TransferStats:
     # page/spill/dedup counters when the staging area runs the paged
     # store (cfg.page_bytes > 0); empty on the flat path
     pages: dict = dataclasses.field(default_factory=dict)
+    # fleet snapshot (placement/tenancy/admission totals) when the session
+    # rode a staging gateway (cfg.gateway_addr); empty otherwise
+    gateway: dict = dataclasses.field(default_factory=dict)
 
     @property
     def staging_gbps(self) -> float:
@@ -96,6 +102,36 @@ class TransferStats:
         d["staging_gbps"] = self.staging_gbps
         d["end_to_end_gbps"] = self.end_to_end_gbps
         return d
+
+    @classmethod
+    def merge(cls, stats: "list[TransferStats] | tuple") -> "TransferStats":
+        """Combine per-rank/per-session stats into one fleet view.
+
+        Additive fields (bytes, datasets, blocked/open/close time) sum;
+        wall-clock phases (``to_staging_s``, ``end_to_end_s``) take the
+        max — concurrent sessions overlap, so summing them would invent
+        serial time; ``peak_inflight_bytes`` also maxes (a high-water
+        mark, not a flow); per-channel rows concatenate.
+        """
+        stats = list(stats)
+        if not stats:
+            return cls(engine="merged")
+        out = cls(engine=stats[0].engine if len(
+            {s.engine for s in stats}) == 1 else "merged")
+        for s in stats:
+            out.nbytes += s.nbytes
+            out.n_datasets += s.n_datasets
+            out.open_s += s.open_s
+            out.close_s += s.close_s
+            out.write_wait_s += s.write_wait_s
+            out.to_staging_s = max(out.to_staging_s, s.to_staging_s)
+            out.end_to_end_s = max(out.end_to_end_s, s.end_to_end_s)
+            out.peak_inflight_bytes = max(out.peak_inflight_bytes,
+                                          s.peak_inflight_bytes)
+            out.channels.extend(s.channels)
+            if s.gateway:
+                out.gateway = dict(s.gateway)   # latest fleet snapshot
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -159,6 +195,12 @@ class Transport(abc.ABC):
     def page_stats(self) -> dict:
         """Page/spill/dedup counters when the staging side runs the paged
         store (``cfg.page_bytes > 0``); empty otherwise."""
+        return {}
+
+    def gateway_stats(self) -> dict:
+        """Fleet snapshot (placement, tenancy, admission totals) when the
+        transport rides a staging gateway (``cfg.gateway_addr``); empty
+        otherwise."""
         return {}
 
 

@@ -527,7 +527,10 @@ class ChannelGroup:
                  "size": nbytes, "n_stripes": len(stripes),
                  "credits": self.credits})
         if not h.get("ok"):
-            raise RuntimeError(f"stripe_open failed: {h.get('error')}")
+            # typed: a gateway's quota/auth rejection surfaces as
+            # QuotaExceededError/AuthError, not a generic RuntimeError
+            from repro.gateway.tenancy import error_from_reply
+            raise error_from_reply(h, "stripe_open failed")
         file_id = h["file_id"]
         for ch in self._channels:       # adopt the receiver's current grant
             ch.set_window(int(h.get("credits", self.credits)))

@@ -107,6 +107,7 @@ class TransferSession:
             return
         self._collect_channel_stats()
         self._collect_page_stats()
+        self._collect_gateway_stats()
         t = time.perf_counter()
         try:
             self.transport.close()
@@ -259,6 +260,19 @@ class TransferSession:
             return
         if pg:
             self.stats.pages = pg
+
+    def _collect_gateway_stats(self) -> None:
+        """Snapshot the gateway's fleet view (placement, tenancy,
+        admission totals) into the stats (pool mode only; direct
+        staging paths report {})."""
+        if self.cfg.gateway_addr is None:
+            return
+        try:
+            gw = self.transport.gateway_stats()
+        except Exception:  # noqa: BLE001 — stats must not break egress
+            return
+        if gw:
+            self.stats.gateway = gw
 
     def _check_live(self) -> None:
         if not self._opened:

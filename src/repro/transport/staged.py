@@ -32,19 +32,29 @@ class StagedTransport(Transport):
 
     # -- lifecycle ------------------------------------------------------
     def open(self) -> None:
-        addr = self.cfg.staging_addr
-        if addr is None:
-            if self.cfg.savime_addr is None:
-                raise ValueError("rdma_staged needs staging_addr (attach) "
-                                 "or savime_addr (own a staging server)")
-            self._staging = StagingServer(
-                self.cfg.savime_addr, mem_capacity=self.cfg.mem_capacity,
-                send_threads=self.cfg.send_threads,
-                straggler_timeout=self.cfg.straggler_timeout,
-                page_bytes=self.cfg.page_bytes,
-                spill_dir=self.cfg.spill_dir,
-                dedup=self.cfg.dedup).start()
-            addr = self._staging.addr
+        gateway = self.cfg.gateway_addr is not None
+        if gateway:
+            # pool mode (DESIGN.md §12): the gateway is the one address —
+            # data admits per dataset (redirect protocol) and the control
+            # conn rides the gateway so drain/run_savime/stats see the
+            # whole fleet
+            addr = self.cfg.gateway_addr
+        else:
+            addr = self.cfg.staging_addr
+            if addr is None:
+                if self.cfg.savime_addr is None:
+                    raise ValueError("rdma_staged needs staging_addr "
+                                     "(attach), savime_addr (own a staging "
+                                     "server) or gateway_addr (pool)")
+                self._staging = StagingServer(
+                    self.cfg.savime_addr,
+                    mem_capacity=self.cfg.mem_capacity,
+                    send_threads=self.cfg.send_threads,
+                    straggler_timeout=self.cfg.straggler_timeout,
+                    page_bytes=self.cfg.page_bytes,
+                    spill_dir=self.cfg.spill_dir,
+                    dedup=self.cfg.dedup).start()
+                addr = self._staging.addr
         self.comm = Communicator(addr, self.cfg.io_threads,
                                  self.cfg.block_size,
                                  self.cfg.straggler_timeout,
@@ -53,8 +63,14 @@ class StagedTransport(Transport):
                                  credits=self.cfg.credits,
                                  wire_format=self.cfg.wire_format,
                                  coalesce_bytes=self.cfg.coalesce_bytes,
-                                 linger_ms=self.cfg.linger_ms)
+                                 linger_ms=self.cfg.linger_ms,
+                                 gateway=gateway, tenant=self.cfg.tenant)
         self._ctrl = wire.connect(addr)
+        if gateway and self.cfg.tenant:
+            # bind the control conn to the tenant for proxied/DDL ops
+            with self._ctrl_lock:
+                wire.request(self._ctrl, {"op": "hello",
+                                          "tenant": self.cfg.tenant})
 
     def close(self) -> None:
         if self.comm is not None:
@@ -96,9 +112,22 @@ class StagedTransport(Transport):
         except (RuntimeError, OSError):
             return {}
 
+    def gateway_stats(self) -> dict:
+        """Fleet snapshot from the gateway ``stats`` op (placement,
+        tenancy, per-backend admission totals); empty off-gateway."""
+        if self.cfg.gateway_addr is None:
+            return {}
+        try:
+            h = self._ctrl_request({"op": "stats"})
+        except (RuntimeError, OSError):
+            return {}
+        return {k: v for k, v in h.items()
+                if k not in ("ok", "nbytes")}
+
     def _ctrl_request(self, header: dict) -> dict:
         with self._ctrl_lock:
             h, _ = wire.request(self._ctrl, header)
         if not h.get("ok"):
-            raise RuntimeError(f"staging error: {h.get('error')}")
+            from repro.gateway.tenancy import error_from_reply
+            raise error_from_reply(h, "staging error")
         return h

@@ -174,18 +174,16 @@ def test_stats_parity_across_transports(savime):
 # ---------------------------------------------------------------------------
 
 
-def test_legacy_engine_shims_warn_and_work(savime):
-    import repro.core.transfer as legacy
-    bufs = [np.ones(1 << 10) for _ in range(2)]
-    with pytest.deprecated_call():
-        res = legacy.ENGINES["rdma_staged"](
-            bufs, ["l0", "l1"], savime_addr=savime.addr,
-            block_size=32 << 10, io_threads=1)
-    assert isinstance(res, legacy.TransferResult)   # alias of TransferStats
-    assert res.nbytes == sum(b.nbytes for b in bufs)
-    with pytest.deprecated_call():
-        legacy.ENGINES["scp_mem"](bufs, ["l2", "l3"],
-                                  savime_addr=savime.addr, io_threads=1)
+def test_legacy_engine_shims_are_gone():
+    # the deprecation shims (kept "for one release") are retired: the
+    # module must fail to import cleanly, and the real API must not have
+    # grown accidental aliases of the old names
+    with pytest.raises(ImportError):
+        import repro.core.transfer  # noqa: F401
+    import repro.core as core
+    for old in ("run_rdma_staged", "run_scp", "run_ssh_direct",
+                "ENGINES", "TransferResult"):
+        assert not hasattr(core, old)
 
 
 # ---------------------------------------------------------------------------
