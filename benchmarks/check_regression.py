@@ -10,6 +10,7 @@ compares *dimensionless ratio metrics* — speedups and capacity multiples
            speedup_vs_flat              (paging does not slow ingest)
     fig11  speedup_vs_proxy             (redirect beats full proxying)
            spread_min_over_mean         (the ring spreads the ingest)
+    fig12  wire_reduction_x             (egress codecs still reduce)
 
 A current row regresses when its metric drops more than ``--tolerance``
 (default 25%) below the committed snapshot's value; improvements always
@@ -40,6 +41,7 @@ SCHEMAS = {
               ("effective_capacity_x", "speedup_vs_flat")),
     "fig11": (("row", "mode", "backends"),
               ("speedup_vs_proxy", "spread_min_over_mean")),
+    "fig12": (("ds_kb", "codec", "wire"), ("wire_reduction_x",)),
 }
 
 

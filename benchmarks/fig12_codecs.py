@@ -1,0 +1,175 @@
+"""Fig 12 (beyond the paper): egress reduction codecs (DESIGN.md §13).
+
+The staging link is the shared, contended resource: the paper scales the
+analytical cluster, we shrink the bytes instead.  This sweep measures the
+negotiated codec layer on a checkpoint-style stream — successive versions
+of one dataset where each step perturbs a sparse subset of elements —
+across codec x dataset size x wire format, with matched interleaved
+trials (every codec sees the same buffers in the same trial):
+
+  * ``none``       — the control: raw bytes, reduction 1.0 by definition.
+  * ``delta-rle``  — lossless xor-delta + run-length vs the previous
+                     version; byte-exact at the endpoint.
+  * ``int8-block`` — lossy per-4096-block quantization; the endpoint
+                     value is checked against the provable scale/2 bound.
+
+The gated metric is ``wire_reduction_x`` = raw bytes / wire bytes — a
+dimensionless ratio that encodes "the codec still reduces the stream"
+independent of hardware (loopback wall time would reward *not* encoding,
+since the CPU encode cost is real but the network win here is fake).
+Every trial also cross-checks the accounting: client ``codec_stats``
+wire bytes must equal the server's ``bytes_in``, raw bytes its
+``raw_bytes_in``, and the SAVIME hop must ship raw-size bytes.
+
+Prints one JSON row per cell:
+
+    {"fig": "fig12", "codec": ..., "ds_kb": ..., "wire": ...,
+     "wire_reduction_x": ..., "gbps": ..., ...}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+
+import numpy as np
+
+from benchmarks.common import ci95, fresh_stack, write_rows
+from repro.transport import TransferSession, TransportConfig
+
+CODECS = ("none", "delta-rle", "int8-block")
+
+
+def make_stream(n_versions: int, ds_bytes: int, seed: int = 0):
+    """Checkpoint-style stream: version i+1 = version i with ~1% of the
+    float64 elements replaced (sparse byte-level churn, so delta-rle has
+    structure to find and int8-block has floats to quantize)."""
+    rng = np.random.default_rng(seed)
+    n = ds_bytes // 8
+    buf = rng.standard_normal(n)
+    out = [buf]
+    for _ in range(n_versions - 1):
+        buf = buf.copy()
+        k = max(1, n // 100)
+        idx = rng.integers(0, n, k)
+        buf[idx] = rng.standard_normal(k)
+        out.append(buf)
+    return out
+
+
+def _int8_bound(x: np.ndarray, block: int = 4096) -> np.ndarray:
+    """Per-element |err| bound scale/2 = amax/254 over each codec block."""
+    n = x.size
+    nb = -(-n // block)
+    xb = np.zeros(nb * block)
+    xb[:n] = np.abs(x)
+    amax = xb.reshape(nb, block).max(axis=1)
+    scale = np.where(amax == 0, 1.0, amax) / 127.0
+    return np.repeat(scale, block)[:n] * 0.5
+
+
+def _trial(codec: str, wire: str, stream, tag: str) -> tuple[float, dict]:
+    """Ship one version stream through a fresh stack; returns (ingest
+    wall time, accounting) and verifies endpoint content + parity."""
+    total_raw = sum(b.nbytes for b in stream)
+    with fresh_stack(mem_capacity=1 << 28, send_threads=1) as (sv, st):
+        cfg = TransportConfig(staging_addr=st.addr, wire_format=wire,
+                              codec=codec, io_threads=1)
+        sess = TransferSession("rdma_staged", cfg).open()
+        t0 = time.perf_counter()
+        for b in stream:                 # same name: a versioned dataset
+            sess.write(tag, b, dtype="double")
+        sess.sync(timeout=120)
+        dt = time.perf_counter() - t0
+        sess.drain(timeout=120)
+        server = sess.server_stats()
+        cs = sess.stats.codec
+        sess.close()
+        got = np.frombuffer(sv.engine.datasets[tag], dtype=np.float64)
+        last = stream[-1]
+        if codec == "int8-block":        # provable per-block bound
+            assert (np.abs(got - last) <= _int8_bound(last) + 1e-12).all(), \
+                f"{tag}: int8-block error bound violated"
+        else:                            # lossless paths are byte-exact
+            assert np.array_equal(got, last), f"{tag}: content mismatch"
+    wire_bytes = cs["wire_bytes"] if cs else total_raw
+    raw_bytes = cs["raw_bytes"] if cs else total_raw
+    # accounting parity: what the client says it shipped is what the
+    # server metered in, and the SAVIME hop carries raw-size bytes
+    assert raw_bytes == total_raw, (raw_bytes, total_raw)
+    assert server["bytes_in"] == wire_bytes, (server["bytes_in"], cs)
+    assert server["raw_bytes_in"] == total_raw, server
+    assert server["bytes_to_savime"] == total_raw, server
+    if cs:
+        assert cs["fallbacks"] == 0, cs
+    return dt, {"wire_bytes": wire_bytes, "raw_bytes": raw_bytes,
+                "encode_s": cs.get("encode_s", 0.0) if cs else 0.0,
+                "codec_datasets": server.get("codec_datasets", 0)}
+
+
+def run(n_versions=6, ds_kbs=(64, 256, 1024), wires=("json", "bin1"),
+        trials=3, quiet=False):
+    rows = []
+    for ds_kb in ds_kbs:
+        stream = make_stream(n_versions, ds_kb << 10, seed=ds_kb)
+        total_raw = sum(b.nbytes for b in stream)
+        for wire in wires:
+            times = {c: [] for c in CODECS}
+            acct = {c: None for c in CODECS}
+            for t in range(trials):
+                for c in CODECS:         # matched: every codec per trial
+                    dt, a = _trial(c, wire, stream,
+                                   f"ck{ds_kb}{wire}{t}{c}")
+                    times[c].append(dt)
+                    acct[c] = a
+            for c in CODECS:
+                med = statistics.median(times[c])
+                mean, ci = ci95(times[c])
+                a = acct[c]
+                row = {"fig": "fig12", "codec": c, "ds_kb": ds_kb,
+                       "wire": wire, "n_versions": n_versions,
+                       "median_s": round(med, 6), "mean_s": round(mean, 6),
+                       "ci95_s": round(ci, 6),
+                       "gbps": round(total_raw / med / 1e9, 4),
+                       "wire_kb": a["wire_bytes"] >> 10,
+                       "encode_ms": round(a["encode_s"] * 1e3, 3),
+                       "wire_reduction_x": round(
+                           a["raw_bytes"] / a["wire_bytes"], 3)}
+                rows.append(row)
+                if not quiet:
+                    print(json.dumps(row), flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one size, both wires, 2 matched trials (CI)")
+    ap.add_argument("--full", action="store_true",
+                    help="more sizes / versions / trials (slower)")
+    ap.add_argument("--out", default=None,
+                    help="also write the rows to this JSON file")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(n_versions=6, ds_kbs=(256,), wires=("json", "bin1"),
+                   trials=2)
+        # the smoke gate: every trial already verified endpoint content
+        # (int8 within its scale/2 bound) and client<->server accounting
+        # parity; here both reducing codecs must actually reduce the
+        # stream >= 1.5x while the control stays at exactly 1.0
+        by = {(r["codec"], r["wire"]): r for r in rows}
+        for wire in ("json", "bin1"):
+            assert by[("none", wire)]["wire_reduction_x"] == 1.0, rows
+            assert by[("delta-rle", wire)]["wire_reduction_x"] >= 1.5, rows
+            assert by[("int8-block", wire)]["wire_reduction_x"] >= 1.5, rows
+    elif args.full:
+        rows = run(n_versions=8, ds_kbs=(64, 256, 1024, 4096), trials=5)
+    else:
+        rows = run()
+    if args.out:
+        write_rows(args.out, rows)
+
+
+if __name__ == "__main__":
+    main()

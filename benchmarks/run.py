@@ -13,7 +13,7 @@ def main() -> None:
     from benchmarks import (fig3_blocksize, fig4_threads, fig5_scaling,
                             fig6_baselines, fig7_query_latency,
                             fig8_striping, fig9_coalesce, fig11_gateway,
-                            roofline)
+                            fig12_codecs, roofline)
 
     print("name,us_per_call,derived")
     if args.full:
@@ -26,6 +26,8 @@ def main() -> None:
         fig9_coalesce.run(ds_kb=(16, 64, 256, 1024, 4096, 16384), trials=7,
                           budget_mb=128)
         fig11_gateway.run(n_backends=4, n_datasets=24, ds_kb=1024, trials=5)
+        fig12_codecs.run(n_versions=8, ds_kbs=(64, 256, 1024, 4096),
+                         trials=5)
     else:
         fig3_blocksize.run(n_clients=2, n_files=4, file_mb=4, trials=3,
                            blocks_kb=(16, 64, 256, 1024, 4096, 16384))
@@ -38,6 +40,7 @@ def main() -> None:
                           blocks_kb=(1024, 4096), channels=(1, 2, 4))
         fig9_coalesce.run(ds_kb=(16, 64, 16384), trials=3, budget_mb=16)
         fig11_gateway.run(n_backends=3, n_datasets=9, ds_kb=256, trials=2)
+        fig12_codecs.run(n_versions=6, ds_kbs=(64, 256), trials=2)
     roofline.run()
 
 

@@ -53,13 +53,31 @@ class Communicator:
                  n_channels: int = 1, stripe_bytes: Optional[int] = None,
                  credits: int = 4, wire_format: str = wire.WIRE_JSON,
                  coalesce_bytes: int = 0, linger_ms: float = 2.0,
-                 gateway: bool = False, tenant: Optional[str] = None):
+                 gateway: bool = False, tenant: Optional[str] = None,
+                 codec: str = "none", decode_at: str = "staging"):
         if wire_format not in wire.SUPPORTED_WIRE:
             raise ValueError(f"unknown wire_format {wire_format!r}; "
                              f"supported: {', '.join(wire.SUPPORTED_WIRE)}")
+        if decode_at not in ("staging", "query"):
+            raise ValueError(f"unknown decode_at {decode_at!r}; "
+                             "supported: staging, query")
         self.addr = addr
         self.block_size = block_size
         self.wire_format = wire_format
+        # egress reduction codec (DESIGN.md §13): encode happens centrally
+        # in submit() so the block, coalesced and striped paths all ship
+        # the same reduced bytes. The codec only activates once the peer
+        # advertised it in the hello handshake (_codec_active); against an
+        # old server we silently fall back to raw bytes.
+        self._codec = None
+        self._decode_at = decode_at
+        if codec != "none":
+            from repro import codec as codec_mod
+            self._codec = codec_mod.create(codec)   # raises on unknown name
+        self._codec_lock = threading.Lock()          # chain/order + counters
+        self._codec_ok: Optional[bool] = None
+        self._codec_counts = {"raw_bytes": 0, "wire_bytes": 0,
+                              "encode_s": 0.0, "datasets": 0, "fallbacks": 0}
         self._pool = None
         self._socks = wire.ConnCache()   # one conn (≈ RC QP) per I/O thread
         self._channels = None
@@ -93,9 +111,13 @@ class Communicator:
 
     def _connect(self, addr: str):
         sock = wire.connect(addr)
+        codecs = (self._codec.name,) if self._codec is not None else ()
         if self.wire_format == wire.WIRE_BIN1:
             # per-connection handshake; an old server leaves us on JSON
-            wire.negotiate(sock)
+            wire.negotiate(sock, codecs=codecs)
+        elif codecs:
+            # codec negotiation without a wire upgrade: offer JSON only
+            wire.negotiate(sock, formats=(wire.WIRE_JSON,), codecs=codecs)
         return sock
 
     def _conn(self, addr: Optional[str] = None):
@@ -120,15 +142,64 @@ class Communicator:
             raise error_from_reply(h, "staging error")
         return h
 
+    # -- egress codec stage (DESIGN.md §13) ------------------------------
+    def _codec_active(self) -> bool:
+        """True once the peer has accepted our codec in a hello handshake.
+
+        Probed lazily on the main address (the gateway answers for its
+        whole pool); a peer that never advertised the codec leaves the
+        sender on raw bytes — recorded as a fallback, not an error."""
+        if self._codec is None:
+            return False
+        if self._codec_ok is None:
+            with self._codec_lock:
+                if self._codec_ok is None:
+                    try:
+                        sock = self._conn(self.addr)
+                        ok = self._codec.name in wire.negotiated_codecs(sock)
+                    except (OSError, RuntimeError):
+                        ok = False
+                    if not ok:
+                        self._codec_counts["fallbacks"] += 1
+                    self._codec_ok = ok
+        return self._codec_ok
+
+    def _encode(self, name: str, dtype: str, buf: np.ndarray):
+        """Encode one dataset; returns (wire_buf, codec header fields).
+
+        Serialized under the codec lock: chained codecs (delta-rle) must
+        observe submissions in order even when I/O threads race."""
+        t0 = time.perf_counter()
+        with self._codec_lock:
+            payload, meta = self._codec.encode(buf, dtype=dtype, key=name)
+            enc = payload if isinstance(payload, np.ndarray) else \
+                np.frombuffer(memoryview(payload).cast("B"), np.uint8)
+            c = self._codec_counts
+            c["raw_bytes"] += buf.nbytes
+            c["wire_bytes"] += enc.nbytes
+            c["encode_s"] += time.perf_counter() - t0
+            c["datasets"] += 1
+        cinfo = {"codec": self._codec.name, "cmeta": meta,
+                 "raw_size": int(meta.get("raw_size", buf.nbytes)),
+                 "decode_at": self._decode_at}
+        return enc, cinfo
+
+    def codec_stats(self) -> dict:
+        if self._codec is None:
+            return {}
+        with self._codec_lock:
+            return dict(self._codec_counts, name=self._codec.name)
+
     # -- the transfer task (runs on an I/O thread) -----------------------
     def _send(self, name: str, dtype: str, buf: np.ndarray,
-              addr: Optional[str] = None) -> int:
+              addr: Optional[str] = None, cinfo: Optional[dict] = None) -> int:
         nbytes = buf.nbytes
         if addr is None and self._gateway is not None:
             addr = self._gateway.admit(name, nbytes)
         # NB: "nbytes" is reserved by the wire framing; use "size"
-        h = self._request({"op": "write_req", "name": name, "dtype": dtype,
-                           "size": nbytes}, addr=addr)
+        h = self._request(dict({"op": "write_req", "name": name,
+                                "dtype": dtype, "size": nbytes},
+                               **(cinfo or {})), addr=addr)
         conn = self._conn(addr)
         use_bin = wire.negotiated(conn) == wire.WIRE_BIN1
         writer = writer_for_reply(h, nbytes)
@@ -162,8 +233,9 @@ class Communicator:
         pushed in a single vectored ``sendmsg`` — nothing is concatenated
         in user space, the payload iovec list is the item buffers."""
         open_hdr = {"op": "batch_open",
-                    "items": [{"name": it.name, "dtype": it.dtype,
-                               "size": it.nbytes} for it in items]}
+                    "items": [dict({"name": it.name, "dtype": it.dtype,
+                                    "size": it.nbytes}, **(it.extra or {}))
+                              for it in items]}
         write_hdr = {"op": "batch_write", "count": len(items)}
         payload = [it.buf for it in items if it.nbytes]
         wire.send_frames_vectored(
@@ -194,10 +266,17 @@ class Communicator:
             self._flush_one_batch(self._conn(addr), group)
 
     def submit(self, name: str, dtype: str, buf: np.ndarray) -> TaskHandle:
+        cinfo = None
+        if self._codec_active():
+            # one central encode feeds all three egress paths; downstream
+            # decisions (coalescing threshold, striping plan) see the
+            # *wire* size — that is the point of reducing first
+            buf, cinfo = self._encode(name, dtype, buf)
         if self._coalescer is not None and \
                 buf.nbytes < self._coalescer.coalesce_bytes:
             flat = buf.reshape(-1).view(np.uint8)
-            return self._coalescer.add(name, dtype, flat, buf.nbytes)
+            return self._coalescer.add(name, dtype, flat, buf.nbytes,
+                                       extra=cinfo)
         if self._channel_opts["n_channels"] > 1:
             # striped mode bypasses the I/O pool entirely: stripes are
             # enqueued onto the channels right away and datasets pipeline
@@ -216,12 +295,12 @@ class Communicator:
                     return h
             else:
                 group = self._channels
-            tr = group.submit_dataset(name, dtype, buf)
+            tr = group.submit_dataset(name, dtype, buf, codec_info=cinfo)
             tr.add_done_callback(
                 lambda t, h=h: h.complete(result=t.nbytes)
                 if t.error is None else h.complete(error=t.error))
             return h
-        return self._pool.submit(self._send, name, dtype, buf,
+        return self._pool.submit(self._send, name, dtype, buf, None, cinfo,
                                  name=f"write-{name}")
 
     def _all_groups(self) -> list:
@@ -263,7 +342,8 @@ class StagingClient:
                  max_inflight_bytes: Optional[int] = None,
                  n_channels: int = 1, stripe_bytes: Optional[int] = None,
                  credits: int = 4, wire_format: str = wire.WIRE_JSON,
-                 coalesce_bytes: int = 0, linger_ms: float = 2.0):
+                 coalesce_bytes: int = 0, linger_ms: float = 2.0,
+                 codec: str = "none", decode_at: str = "staging"):
         # imported lazily: repro.transport's engine modules import this
         # module for Communicator
         from repro.transport import TransferSession, TransportConfig
@@ -273,7 +353,8 @@ class StagingClient:
             max_inflight_bytes=max_inflight_bytes,
             n_channels=n_channels, stripe_bytes=stripe_bytes,
             credits=credits, wire_format=wire_format,
-            coalesce_bytes=coalesce_bytes, linger_ms=linger_ms)).open()
+            coalesce_bytes=coalesce_bytes, linger_ms=linger_ms,
+            codec=codec, decode_at=decode_at)).open()
 
     @property
     def comm(self) -> Communicator:

@@ -53,6 +53,8 @@ class InTransitConfig:
     dedup: bool = False              # content-addressed page dedup
     gateway: bool = False            # addr is a staging gateway (pool mode)
     tenant: Optional[str] = None     # tenant token for gateway auth
+    codec: str = "none"              # egress reduction codec (DESIGN.md §13)
+    decode_at: str = "staging"       # "staging" (ingest) | "query" (lazy)
 
 
 def quantize_int8_np(x: np.ndarray, block: int) -> tuple[np.ndarray, np.ndarray]:
@@ -98,7 +100,8 @@ class InTransitSink:
             credits=cfg.credits, wire_format=cfg.wire_format,
             coalesce_bytes=cfg.coalesce_bytes,
             linger_ms=cfg.linger_ms, page_bytes=cfg.page_bytes,
-            spill_dir=cfg.spill_dir, dedup=cfg.dedup)).open()
+            spill_dir=cfg.spill_dir, dedup=cfg.dedup,
+            codec=cfg.codec, decode_at=cfg.decode_at)).open()
         self._tars: set[str] = set()
         self._pending: list[LoadSubtar] = []  # typed DDL to run at flush
         self._lock = threading.Lock()

@@ -38,6 +38,7 @@ import threading
 import time
 from typing import Optional
 
+from repro import codec as codec_mod
 from repro.core import wire
 from repro.core.pagestore import PageStore, PageStoreFull
 from repro.core.queues import FCFSPool
@@ -61,6 +62,13 @@ class _Dataset:
         self.credits_wanted: int = 4
         self.finished = False
         self.last_stripe_at: float = 0.0
+        # egress-codec state (DESIGN.md §13): nbytes is always the *wire*
+        # size of the region; raw_size the decoded size it stands for
+        self.codec: Optional[str] = None
+        self.cmeta: dict = {}
+        self.raw_size: int = 0
+        self.decode_at: str = "staging"
+        self.decoded = False
 
 
 class StagingServer:
@@ -105,11 +113,20 @@ class StagingServer:
         self._savime_local = threading.local()
         self.auto_subtar = auto_subtar
         self.stripe_ttl = stripe_ttl
-        self.stats = {"datasets": 0, "bytes_in": 0, "bytes_to_savime": 0,
+        self.stats = {"datasets": 0, "bytes_in": 0, "raw_bytes_in": 0,
+                      "bytes_to_savime": 0,
                       "disk_fallbacks": 0, "registrations": 0,
                       "stripes": 0, "stripe_dups": 0, "stripe_aborts": 0,
                       "batches": 0, "batched_datasets": 0,
+                      "codec_datasets": 0, "codec_parked": 0,
                       "bin_conns": 0, "credit_pushes": 0, "conns": 0}
+        # egress-codec decode state (DESIGN.md §13): one decoder instance
+        # per codec name (chained codecs keep per-dataset-name history),
+        # serialized by _codec_mutex; a chained dataset that arrives before
+        # its predecessor parks keyed (name, base_seq) until the base lands
+        self._decoders: dict[str, codec_mod.Codec] = {}
+        self._codec_mutex = threading.Lock()
+        self._parked: dict[tuple[str, int], _Dataset] = {}
         # bin1 data connections eligible for proactive credit pushes:
         # conn -> the send lock shared with its serve thread
         self._push_conns: dict[socket.socket, threading.Lock] = {}
@@ -332,7 +349,7 @@ class StagingServer:
         if op == "ping":
             return {"ok": True}
         if op == "hello":
-            return wire.hello_reply(h)
+            return wire.hello_reply(h, codecs=codec_mod.available())
         if op == "write_req":
             return self._op_write_req(h)
         if op == "reg_block":
@@ -371,9 +388,11 @@ class StagingServer:
 
     def _op_write_req(self, h: dict) -> dict:
         nbytes = int(h["size"])
+        cfields = self._parse_codec(h)   # validate before reserving
         if self._store is not None:
             rep = self._open_paged(h, nbytes)
             if rep is not None:
+                self._apply_codec(rep["file_id"], cfields)
                 return rep
             # unsealed demand exceeds the store even after spilling
             # everything cold — the paper's disk tier takes the overflow
@@ -406,10 +425,39 @@ class StagingServer:
             raise
         ds = _Dataset(file_id, h["name"], h.get("dtype", "uint8"), nbytes,
                       region, in_memory)
+        if cfields is not None:
+            ds.codec, ds.cmeta, ds.raw_size, ds.decode_at = cfields
         with self._ds_lock:
             self._datasets[file_id] = ds
         return {"ok": True, "file_id": file_id, "path": path,
                 "in_memory": in_memory}
+
+    def _parse_codec(self, h: dict) -> Optional[tuple]:
+        """Validate and extract the codec fields riding an open header
+        (``codec``/``cmeta``/``raw_size``/``decode_at``, DESIGN.md §13).
+        Raises before any capacity is reserved so a bad codec name cannot
+        leak a reservation; ``None`` for plain (uncoded) datasets."""
+        name = h.get("codec")
+        if not name or name == "none":
+            return None
+        cls = codec_mod.get(name)    # UnknownCodecError on bad names
+        decode_at = h.get("decode_at") or "staging"
+        if decode_at not in ("staging", "query"):
+            raise ValueError(f"unknown decode_at {decode_at!r}")
+        if cls.chained:
+            # chain order only exists at ingest: deltas must decode in
+            # sequence, so query-time laziness is forced off
+            decode_at = "staging"
+        return (name, dict(h.get("cmeta") or {}),
+                int(h.get("raw_size") or 0), decode_at)
+
+    def _apply_codec(self, file_id: str, cfields: Optional[tuple]) -> None:
+        if cfields is None:
+            return
+        with self._ds_lock:
+            ds = self._datasets.get(file_id)
+        if ds is not None:
+            ds.codec, ds.cmeta, ds.raw_size, ds.decode_at = cfields
 
     def _open_paged(self, h: dict, nbytes: int) -> Optional[dict]:
         """Reserve a page table for one dataset; ``None`` when unsealed
@@ -545,16 +593,150 @@ class StagingServer:
 
     def _finish_dataset(self, ds: _Dataset) -> None:
         """Dataset fully received (block-path sync or last stripe): account
-        it and queue the staging→SAVIME forward."""
+        it, decode it if an egress codec applies at ingest, and queue the
+        staging→SAVIME forward."""
         ds.received_at = time.perf_counter()
         ds.region.deregister_all()   # paper: undo registration after sync
         if ds.region.paged:
             # fully received: pages become spillable / dedup-able
             ds.region.seal()
         self.stats["datasets"] += 1
-        self.stats["bytes_in"] += ds.nbytes
+        self.stats["bytes_in"] += ds.nbytes          # wire (coded) bytes
+        self.stats["raw_bytes_in"] += ds.raw_size if ds.codec else ds.nbytes
+        if ds.codec and ds.decode_at == "staging":
+            self._decode_ingest(ds)   # forwards (or parks) from inside
+            return
         self._send_pool.submit(self._send_to_savime, ds,
                                name=f"send-{ds.name}")
+
+    # -- egress-codec decode (DESIGN.md §13) ------------------------------
+    def _decoder(self, name: str) -> codec_mod.Codec:
+        dec = self._decoders.get(name)
+        if dec is None:
+            dec = self._decoders[name] = codec_mod.create(name)
+        return dec
+
+    def _region_bytes(self, ds: _Dataset):
+        """One contiguous copy of the dataset's wire payload (the decoder
+        keeps chain history across region swaps, so it needs its own
+        buffer either way)."""
+        if ds.region.paged:
+            ds.region.pin()
+            try:
+                return ds.region.read(0, ds.nbytes)
+            finally:
+                ds.region.unpin()
+        return bytes(ds.region.view()[:ds.nbytes])
+
+    def _decode_ingest(self, ds: _Dataset) -> None:
+        """Decode one finished dataset — and any parked chain successors
+        it unblocks — then queue each for forwarding.
+
+        Chained codecs (delta-rle) require decode in chain order, but
+        io_threads/striping can reorder arrivals: a dataset whose base has
+        not landed yet parks keyed ``(name, base_seq)`` and is revisited
+        the moment its predecessor decodes. All decoder state and parking
+        live under ``_codec_mutex``."""
+        with self._codec_mutex:
+            pending: Optional[_Dataset] = ds
+            while pending is not None:
+                try:
+                    raw = self._decoder(pending.codec).decode(
+                        self._region_bytes(pending), pending.cmeta,
+                        key=pending.name)
+                except codec_mod.CodecOrderError as e:
+                    self._parked[(pending.name, e.base)] = pending
+                    self.stats["codec_parked"] += 1
+                    return
+                except Exception:
+                    # corrupt payload: the region must not leak while the
+                    # error surfaces to the client
+                    with self._ds_lock:
+                        self._datasets.pop(pending.file_id, None)
+                    self._free_dataset(pending)
+                    raise
+                self._swap_region(pending, raw)
+                self.stats["codec_datasets"] += 1
+                self._send_pool.submit(self._send_to_savime, pending,
+                                       name=f"send-{pending.name}")
+                seq = (pending.cmeta or {}).get("seq")
+                pending = (self._parked.pop((pending.name, seq), None)
+                           if seq is not None else None)
+
+    def _swap_region(self, ds: _Dataset, raw) -> None:
+        """Replace the dataset's wire-size storage with its decoded bytes:
+        allocate raw-size storage through the normal tiers (paged store →
+        flat tmpfs → disk), copy, and free the coded region together with
+        its capacity accounting."""
+        n = int(getattr(raw, "nbytes", None) or len(raw))
+        ds.decoded = True
+        old_region, old_mem, old_n = ds.region, ds.in_memory, ds.nbytes
+        if n == 0 and old_n == 0:
+            return                    # empty dataset: nothing to re-home
+        rawv = codec_mod.as_bytes_array(raw)
+        region, in_memory = self._alloc_plain(n)
+        try:
+            off = 0
+            for seg in region.segments(0, n):
+                ln = int(getattr(seg, "nbytes", None) or len(seg))
+                seg[:] = rawv[off:off + ln]
+                off += ln
+            if region.paged:
+                region.seal()
+        except BaseException:
+            region.close(unlink=True)
+            if not region.paged:
+                with self._alloc_lock:
+                    if in_memory:
+                        self._mem_used -= n
+                    else:
+                        self._disk_used -= n
+            raise
+        ds.region, ds.in_memory, ds.nbytes = region, in_memory, n
+        old_region.close(unlink=True)
+        if not old_region.paged:
+            with self._alloc_lock:
+                if old_mem:
+                    self._mem_used -= old_n
+                else:
+                    self._disk_used -= old_n
+
+    def _alloc_plain(self, nbytes: int):
+        """Allocate dataset storage exactly like ``_op_write_req`` does,
+        but for a server-internal (decoded) buffer with no client reply:
+        paged store first, flat tmpfs under the watermark, disk overflow.
+        Returns ``(region, in_memory)`` with the reservation taken."""
+        if self._store is not None:
+            try:
+                table = self._store.alloc(nbytes)
+                return PagedMemoryRegion(self._store, table), True
+            except PageStoreFull:
+                with self._alloc_lock:
+                    self._disk_used += nbytes
+                self.stats["disk_fallbacks"] += 1
+                in_memory = False
+        else:
+            with self._alloc_lock:
+                in_memory = self._mem_used + nbytes <= self.mem_capacity
+                if in_memory:
+                    self._mem_used += nbytes
+                else:
+                    self._disk_used += nbytes
+            if not in_memory:
+                self.stats["disk_fallbacks"] += 1
+        file_id = secrets.token_hex(8)
+        path = os.path.join(self.mem_dir if in_memory else self.disk_dir,
+                            file_id)
+        try:
+            region = MemoryRegion(path, nbytes, create=True)
+        except BaseException:
+            with self._alloc_lock:
+                if in_memory:
+                    self._mem_used -= nbytes
+                else:
+                    self._disk_used -= nbytes
+            raise
+        return region, in_memory
 
     # -- striped ingest (DESIGN.md §9) -----------------------------------
     def _op_stripe_open(self, h: dict) -> dict:
@@ -596,6 +778,9 @@ class StagingServer:
                 span = nbytes
             if ds.n_stripes is None:
                 raise ValueError("dataset was not opened with stripe_open")
+            if h.get("enc") and not ds.codec:
+                raise ValueError(
+                    "enc stripe for a dataset opened without a codec")
             if off < 0 or off + span > ds.nbytes:
                 raise ValueError(
                     f"stripe [{off},{off + span}) outside dataset "
@@ -677,9 +862,19 @@ class StagingServer:
 
     # -- background forward (FCFS pool) ---------------------------------
     def _send_to_savime(self, ds: _Dataset) -> None:
+        sent = ds.nbytes
         try:
             cli = self._savime()
-            if ds.region.paged:
+            if ds.codec and not ds.decoded:
+                # decode_at="query": the dataset was staged in wire form
+                # (coded pages dedup and spill as-is); decode lazily on
+                # the staging→SAVIME hop
+                with self._codec_mutex:
+                    raw = self._decoder(ds.codec).decode(
+                        self._region_bytes(ds), ds.cmeta, key=ds.name)
+                cli.load_dataset(ds.name, ds.dtype, raw)
+                sent = int(getattr(raw, "nbytes", None) or len(raw))
+            elif ds.region.paged:
                 # gather page views (spilled pages stream from disk
                 # without displacing hot frames); pin so the LRU cannot
                 # evict a page out from under the send
@@ -697,7 +892,7 @@ class StagingServer:
             if self._stop.is_set():
                 return    # stop() already closed the regions mid-forward
             raise
-        self.stats["bytes_to_savime"] += ds.nbytes
+        self.stats["bytes_to_savime"] += sent
         with self._ds_lock:
             self._datasets.pop(ds.file_id, None)
         self._free_dataset(ds)  # release staging memory (paper §3.2)

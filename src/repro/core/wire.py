@@ -80,6 +80,10 @@ _OP_NAME = {OP_STRIPE: "stripe", OP_BLOCK: "reg_block", OP_ACK: "ack",
 # low nibble: op flags; high nibble: id length in bytes (0-8), so an id
 # whose raw bytes end in 0x00 survives the fixed-width padding exactly
 F_SIDED, F_DUP, F_DONE, F_OK = 1, 2, 4, 8
+# F_ENC shares bit 1 with F_DUP: F_DUP is only meaningful on acks, F_ENC
+# only on stripes (the payload carries codec-encoded bytes), so the bit is
+# unambiguous per op and the 48-byte layout stays frozen.
+F_ENC = 2
 
 
 class ProtocolError(ConnectionError):
@@ -121,6 +125,8 @@ def encode_bin_header(header: dict[str, Any], nbytes: int) -> Optional[bytes]:
         if header.get("sided"):
             flags |= F_SIDED
             size = int(header.get("size", 0))
+        if header.get("enc"):
+            flags |= F_ENC
     elif op == "reg_block":
         code = OP_BLOCK
         packed = _pack_id(header.get("file_id", ""))
@@ -173,6 +179,8 @@ def decode_bin_header(buf) -> dict[str, Any]:
                  offset=offset)
         if flags & F_SIDED:
             h.update(sided=1, size=size)
+        if flags & F_ENC:
+            h["enc"] = 1
     elif op == "reg_block":
         h.update(file_id=ident, offset=offset, size=size)
     elif op == "ack":
@@ -192,20 +200,35 @@ def decode_bin_header(buf) -> dict[str, Any]:
 # Weak keys: entries die with their sockets, no unbounded registry.
 _NEGOTIATED: "weakref.WeakKeyDictionary[socket.socket, str]" = \
     weakref.WeakKeyDictionary()
+# Sockets mapped to the codec names the peer accepted (DESIGN.md §13).
+# Absent / empty means "no codec": a pre-codec server ignores the offer
+# (or errors on hello entirely) and the sender falls back to `none`.
+_NEGOTIATED_CODECS: "weakref.WeakKeyDictionary[socket.socket, tuple]" = \
+    weakref.WeakKeyDictionary()
 
 
 def negotiate(sock: socket.socket,
-              formats: Sequence[str] = SUPPORTED_WIRE) -> str:
-    """Wire-format handshake: offer ``formats``, adopt the server's pick.
+              formats: Sequence[str] = SUPPORTED_WIRE,
+              codecs: Sequence[str] = ()) -> str:
+    """Wire-format (+ codec) handshake: offer, adopt the server's pick.
 
     A server that predates the handshake answers the unknown ``hello`` op
     with an error — that *is* the negotiation: the connection stays on
-    JSON. The result is recorded per socket (:func:`negotiated`)."""
-    h, _ = request(sock, {"op": "hello", "wire": list(formats)})
+    JSON. Likewise a pre-codec server simply omits ``codecs`` from its
+    reply and the sender keeps shipping raw bytes (codec ``none``). The
+    results are recorded per socket (:func:`negotiated`,
+    :func:`negotiated_codecs`)."""
+    offer: dict[str, Any] = {"op": "hello", "wire": list(formats)}
+    if codecs:
+        offer["codecs"] = list(codecs)
+    h, _ = request(sock, offer)
     fmt = h.get("wire") if h.get("ok") else None
     if fmt not in formats:
         fmt = WIRE_JSON
     _NEGOTIATED[sock] = fmt
+    accepted = h.get("codecs") if h.get("ok") else None
+    _NEGOTIATED_CODECS[sock] = tuple(
+        c for c in (accepted or ()) if c in codecs)
     return fmt
 
 
@@ -214,14 +237,28 @@ def negotiated(sock: socket.socket) -> str:
     return _NEGOTIATED.get(sock, WIRE_JSON)
 
 
+def negotiated_codecs(sock: socket.socket) -> tuple:
+    """Codec names both peers speak (empty when never negotiated)."""
+    return _NEGOTIATED_CODECS.get(sock, ())
+
+
 def hello_reply(header: dict[str, Any],
-                supported: Sequence[str] = SUPPORTED_WIRE) -> dict[str, Any]:
+                supported: Sequence[str] = SUPPORTED_WIRE,
+                codecs: Sequence[str] = ()) -> dict[str, Any]:
     """Server side of the handshake: pick the client's most-preferred
-    format this server also speaks (JSON is always common ground)."""
+    format this server also speaks (JSON is always common ground), and
+    echo the subset of offered codecs this server can decode. Old clients
+    never send ``codecs``; old servers never reply with it — either way
+    the connection degrades to codec ``none`` silently."""
+    reply: dict[str, Any] = {"ok": True, "wire": WIRE_JSON}
     for fmt in header.get("wire") or ():
         if fmt in supported:
-            return {"ok": True, "wire": fmt}
-    return {"ok": True, "wire": WIRE_JSON}
+            reply["wire"] = fmt
+            break
+    offered = header.get("codecs")
+    if offered and codecs:
+        reply["codecs"] = [c for c in offered if c in codecs]
+    return reply
 
 
 # ---------------------------------------------------------------------------

@@ -381,7 +381,12 @@ class GatewayServer:
         if op == "hello":
             if h.get("tenant"):
                 state["tenant"] = self.tenants.authenticate(h["tenant"])
-            return dict(wire.hello_reply(h), gateway=True, epoch=self.epoch)
+            # advertise the codec registry on the backends' behalf — every
+            # pool member runs the same build, and redirected writers only
+            # hello against the gateway (DESIGN.md §13)
+            from repro import codec as codec_mod
+            return dict(wire.hello_reply(h, codecs=codec_mod.available()),
+                        gateway=True, epoch=self.epoch)
         if op == "ring":
             self.stats["ring_fetches"] += 1
             with self._lock:

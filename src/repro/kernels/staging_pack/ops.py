@@ -52,13 +52,55 @@ def pack(x: jax.Array, *, block_bytes: int = 4 << 20,
 
 def unpack(blocks: jax.Array, scales: jax.Array, shape: tuple[int, ...],
            *, block_bytes: int = 4 << 20, dtype=jnp.float32) -> jax.Array:
-    """Inverse of pack (host/analysis side). Tile geometry is recovered
-    from the block array itself (TC is always the 128-lane width)."""
-    del block_bytes
-    tc = 128
+    """Inverse of pack (host/analysis side). The lane width comes from
+    `tile_for_block` on the *packed* dtype — the same computation pack
+    used — so round-trips survive `vmem_tile` picking a non-128 lane
+    width; rows-per-block is recovered from the packed shape, which keeps
+    unpack independent of the exact `block_bytes` pack was called with."""
+    _, tc = tile_for_block(block_bytes, blocks.dtype)
+    if blocks.shape[1] % tc:
+        raise ValueError(
+            f"blocks have {blocks.shape[1]} elems/block, not a multiple "
+            f"of the {tc}-lane tile width for dtype {blocks.dtype}")
     tr = blocks.shape[1] // tc
     n = int(np.prod(shape))
     rows = -(-n // tc)
     rows += (-rows) % tr
     full = ref.unpack_blocks_ref(blocks, scales, (rows, tc), (tr, tc), dtype)
     return full.reshape(-1)[:n].reshape(shape)
+
+
+def quantize_blocks(x: jax.Array, *, block_elems: int = 4096,
+                    impl: str = "xla", interpret: bool = False):
+    """Egress-codec quantizing variant: flatten, pad to `block_elems`, and
+    emit `(n_blocks, block_elems)` int8 plus one f32 amax/127 scale per
+    block.  Blocks cover *consecutive flat elements* (the column grid is a
+    single tile wide), matching the int8-block codec's host layout, so the
+    device->host copy moves int8 + scales instead of full-width floats.
+    """
+    if block_elems % 128:
+        raise ValueError(f"block_elems must be a multiple of 128 lanes, "
+                         f"got {block_elems}")
+    tc = 128
+    tr = block_elems // tc
+    n = int(x.size)
+    nb = -(-n // block_elems)
+    if n == 0:
+        return (jnp.zeros((0, block_elems), jnp.int8),
+                jnp.zeros((0,), jnp.float32))
+    flat = x.reshape(-1)
+    pad = nb * block_elems - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    x2 = flat.reshape(nb * tr, tc)
+    if impl == "pallas":
+        return kernel.pack_blocks(x2, tile=(tr, tc), out_dtype=jnp.int8,
+                                  interpret=interpret)
+    return ref.pack_blocks_ref(x2, tile=(tr, tc), out_dtype=jnp.int8)
+
+
+def dequantize_blocks(blocks: jax.Array, scales: jax.Array, n: int, *,
+                      dtype=jnp.float32) -> jax.Array:
+    """Inverse of `quantize_blocks` (flat, truncated to `n` elements)."""
+    t = blocks.astype(jnp.float32) * scales[:, None]
+    return t.reshape(-1)[:n].astype(dtype)

@@ -64,6 +64,14 @@ def main() -> None:
     ap.add_argument("--dedup", action="store_true",
                     help="content-addressed page dedup: identical sealed "
                          "pages stored once (needs --page-kb)")
+    ap.add_argument("--codec", default="none",
+                    help="egress reduction codec for staged datasets "
+                         "(none | delta-rle | int8-block; DESIGN.md §13)")
+    ap.add_argument("--decode-at", default="staging",
+                    choices=["staging", "query"],
+                    help="decode coded datasets at ingest (default) or "
+                         "store them compressed and decode lazily on the "
+                         "staging->SAVIME hop")
     ap.add_argument("--analyzer", default=None,
                     choices=analysis.analyzers.available(),
                     help="summarize staged decode latencies with a "
@@ -145,7 +153,9 @@ def main() -> None:
                                              spill_dir=args.spill_dir,
                                              dedup=args.dedup,
                                              gateway=bool(args.pool),
-                                             tenant=tenant_token))
+                                             tenant=tenant_token,
+                                             codec=args.codec,
+                                             decode_at=args.decode_at))
 
     key = jax.random.PRNGKey(2)
     with jax.set_mesh(mesh):

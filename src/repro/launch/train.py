@@ -75,6 +75,14 @@ def main() -> None:
                     help="content-addressed page dedup: identical sealed "
                          "pages (e.g. repeated checkpoint shards) stored "
                          "once (needs --page-kb)")
+    ap.add_argument("--codec", default="none",
+                    help="egress reduction codec for staged datasets "
+                         "(none | delta-rle | int8-block; DESIGN.md §13)")
+    ap.add_argument("--decode-at", default="staging",
+                    choices=["staging", "query"],
+                    help="decode coded datasets at ingest (default) or "
+                         "store them compressed and decode lazily on the "
+                         "staging->SAVIME hop")
     ap.add_argument("--compress-pods", action="store_true")
     ap.add_argument("--egress", default="diag",
                     choices=["none", "diag", "grads_int8"])
@@ -110,10 +118,12 @@ def main() -> None:
             n_channels=args.channels, wire_format=args.wire_format,
             coalesce_bytes=args.coalesce_kb << 10,
             page_bytes=args.page_kb << 10, spill_dir=args.spill_dir,
-            dedup=args.dedup))
+            dedup=args.dedup,
+            codec=args.codec, decode_at=args.decode_at))
         print(f"[train] in-transit sink --{args.transport}"
               f"(x{args.channels} channels, {args.wire_format} wire"
-              f"{', coalescing' if args.coalesce_kb else ''})"
+              f"{', coalescing' if args.coalesce_kb else ''}"
+              f"{f', codec={args.codec}' if args.codec != 'none' else ''})"
               f"--> SAVIME {savime.addr}")
 
     ckpt = CheckpointManager(args.ckpt_dir, sink=sink)

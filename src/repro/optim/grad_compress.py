@@ -37,14 +37,22 @@ def _quant_blocks(x: jax.Array) -> tuple[jax.Array, jax.Array]:
     return q, scale
 
 
-def _flatten(tree: PyTree):
+def _flatten(tree: PyTree, n_pods: int = 1):
     leaves = jax.tree.leaves(tree)
     flat = jnp.concatenate([l.reshape(-1).astype(jnp.float32)
                             for l in leaves])
     pad = (-flat.size) % QBLOCK
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    return flat.reshape(-1, QBLOCK), pad
+    flat2d = flat.reshape(-1, QBLOCK)
+    # Pad rows to a multiple of n_pods so the ring reduce-scatter shards
+    # evenly — must mirror `error_state`, which sizes the EF residual the
+    # same way (g + e in body would otherwise shape-mismatch whenever
+    # ceil(n/QBLOCK) % n_pods != 0).
+    rpad = (-flat2d.shape[0]) % max(n_pods, 1)
+    if rpad:
+        flat2d = jnp.pad(flat2d, ((0, rpad), (0, 0)))
+    return flat2d, pad + rpad * QBLOCK
 
 
 def _unflatten(flat2d: jax.Array, pad: int, tree: PyTree) -> PyTree:
@@ -65,7 +73,7 @@ def compressed_pod_allreduce(grads: PyTree, err: jax.Array, mesh):
     steps (init zeros via `error_state`). Returns (reduced_grads, new_err).
     """
     n_pods = mesh.shape["pod"]
-    flat, pad = _flatten(grads)
+    flat, pad = _flatten(grads, n_pods)
     n_blocks = flat.shape[0]
 
     def body(g, e):

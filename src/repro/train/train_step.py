@@ -124,13 +124,10 @@ class TrainSetup:
 
                 def body(params, batch_pod, err_pod):
                     (loss, metrics), grads = grad_fn(params, batch_pod)
-                    flat, pad = grad_compress._flatten(grads)
-                    rpad = (-flat.shape[0]) % n_pods   # ring RS needs n|rows
-                    if rpad:
-                        flat = jnp.pad(flat, ((0, rpad), (0, 0)))
+                    # _flatten row-pads to a multiple of n_pods (ring RS
+                    # needs n|rows), matching error_state's layout.
+                    flat, pad = grad_compress._flatten(grads, n_pods)
                     red, new_err = _pod_reduce(flat, err_pod[0], n_pods)
-                    if rpad:
-                        red = red[:-rpad]
                     loss = jax.lax.pmean(loss, "pod")
                     metrics = jax.tree.map(
                         lambda m: jax.lax.pmean(m, "pod"), metrics)

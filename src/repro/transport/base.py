@@ -56,6 +56,9 @@ class TransportConfig:
     gateway_addr: Optional[str] = None    # staging gateway (DESIGN.md §12);
     #                                       set => data admits via the pool
     tenant: Optional[str] = None          # tenant token for gateway auth
+    codec: str = "none"                   # egress reduction codec (§13)
+    decode_at: str = "staging"            # "staging" (ingest) | "query"
+    #                                       (store compressed, lazy decode)
     extra: dict = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "TransportConfig":
@@ -88,6 +91,9 @@ class TransferStats:
     # fleet snapshot (placement/tenancy/admission totals) when the session
     # rode a staging gateway (cfg.gateway_addr); empty otherwise
     gateway: dict = dataclasses.field(default_factory=dict)
+    # egress-codec accounting (raw vs wire bytes, encode time) when a
+    # reduction codec is configured (cfg.codec != "none"); empty otherwise
+    codec: dict = dataclasses.field(default_factory=dict)
 
     @property
     def staging_gbps(self) -> float:
@@ -131,6 +137,14 @@ class TransferStats:
             out.channels.extend(s.channels)
             if s.gateway:
                 out.gateway = dict(s.gateway)   # latest fleet snapshot
+            if s.codec:
+                c = out.codec
+                c["name"] = s.codec.get("name", c.get("name"))
+                for k in ("raw_bytes", "wire_bytes", "datasets",
+                          "fallbacks"):
+                    c[k] = c.get(k, 0) + int(s.codec.get(k, 0))
+                c["encode_s"] = c.get("encode_s", 0.0) + \
+                    float(s.codec.get("encode_s", 0.0))
         return out
 
 
@@ -200,6 +214,12 @@ class Transport(abc.ABC):
     def gateway_stats(self) -> dict:
         """Fleet snapshot (placement, tenancy, admission totals) when the
         transport rides a staging gateway (``cfg.gateway_addr``); empty
+        otherwise."""
+        return {}
+
+    def codec_stats(self) -> dict:
+        """Egress-codec accounting (raw vs wire bytes, encode time) when a
+        reduction codec is configured (``cfg.codec != "none"``); empty
         otherwise."""
         return {}
 

@@ -157,10 +157,10 @@ class _Transfer:
 
 class _Stripe:
     __slots__ = ("transfer", "file_id", "name", "idx", "n_stripes",
-                 "offset", "view", "writer")
+                 "offset", "view", "writer", "enc")
 
     def __init__(self, transfer, file_id, name, idx, n_stripes, offset,
-                 view, writer=None):
+                 view, writer=None, enc=False):
         self.transfer = transfer
         self.file_id = file_id
         self.name = name
@@ -169,6 +169,7 @@ class _Stripe:
         self.offset = offset
         self.view = view
         self.writer = writer        # RdmaWriter => one-sided data plane
+        self.enc = enc              # payload is codec-encoded (F_ENC flag)
 
 
 _MAX_VECTOR = 64        # frames per sendmsg burst (2 iovecs each, < IOV cap)
@@ -247,6 +248,8 @@ class _Channel:
         header = {"op": "stripe", "file_id": item.file_id,
                   "name": item.name, "stripe_idx": item.idx,
                   "n_stripes": item.n_stripes, "offset": item.offset}
+        if item.enc:
+            header["enc"] = 1       # rides the F_ENC flag on bin1
         payload = item.view
         if item.writer is not None:
             # one-sided plane: the stripe is a raw mmap store (numpy
@@ -503,7 +506,8 @@ class ChannelGroup:
         stripe = max(min(self.stripe_bytes, per_channel), floor, 1)
         return plan_blocks(nbytes, stripe)
 
-    def submit_dataset(self, name: str, dtype: str, buf) -> _Transfer:
+    def submit_dataset(self, name: str, dtype: str, buf,
+                       codec_info: Optional[dict] = None) -> _Transfer:
         """Asynchronously stripe one named buffer across all channels.
 
         Returns the :class:`_Transfer` tracker immediately after the
@@ -512,6 +516,11 @@ class ChannelGroup:
         one's acks are still in flight), which is where the striped path's
         throughput comes from: a blocking per-dataset send would drain the
         pipeline between datasets.
+
+        ``codec_info`` (codec/cmeta/raw_size/decode_at from the sender's
+        encode stage) rides the ``stripe_open`` control frame; the stripes
+        themselves are then flagged ``enc`` so receivers can sanity-check
+        that encoded payloads only land in codec-opened datasets.
         """
         if not self._opened or self._closed:
             raise RuntimeError("ChannelGroup not open")
@@ -523,9 +532,9 @@ class ChannelGroup:
         with self._ctrl_lock:
             h, _ = wire.request(
                 self._ctrl,
-                {"op": "stripe_open", "name": name, "dtype": dtype,
-                 "size": nbytes, "n_stripes": len(stripes),
-                 "credits": self.credits})
+                dict({"op": "stripe_open", "name": name, "dtype": dtype,
+                      "size": nbytes, "n_stripes": len(stripes),
+                      "credits": self.credits}, **(codec_info or {})))
         if not h.get("ok"):
             # typed: a gateway's quota/auth rejection surfaces as
             # QuotaExceededError/AuthError, not a generic RuntimeError
@@ -551,7 +560,8 @@ class ChannelGroup:
         for i, (off, size) in enumerate(stripes):
             ch = self._channels[(base + i) % self.n_channels]
             ch.q.put(_Stripe(tr, file_id, name, i, len(stripes), off,
-                             flat[off:off + size], writer))
+                             flat[off:off + size], writer,
+                             enc=codec_info is not None))
         return tr
 
     def _transfer_done(self, _tr: _Transfer) -> None:

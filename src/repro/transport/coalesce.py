@@ -49,6 +49,7 @@ class CoalesceItem:
     buf: object            # flat uint8 view of the caller's buffer
     nbytes: int
     handle: TaskHandle
+    extra: Optional[dict] = None   # codec header fields riding batch_open
 
 
 class Coalescer:
@@ -78,10 +79,11 @@ class Coalescer:
         self._worker.start()
 
     # -- producer side --------------------------------------------------
-    def add(self, name: str, dtype: str, buf, nbytes: int) -> TaskHandle:
+    def add(self, name: str, dtype: str, buf, nbytes: int,
+            extra: Optional[dict] = None) -> TaskHandle:
         """Buffer one small dataset; returns its completion handle."""
         handle = TaskHandle(self._flush_fn, (), name=f"coalesce-{name}")
-        item = CoalesceItem(name, dtype, buf, nbytes, handle)
+        item = CoalesceItem(name, dtype, buf, nbytes, handle, extra)
         with self._cond:
             if self._stop:
                 raise RuntimeError("Coalescer is closed")

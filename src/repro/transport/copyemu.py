@@ -29,7 +29,11 @@ they never negotiate the bin1 fast path or coalesce small datasets,
 whatever ``cfg.wire_format`` / ``cfg.coalesce_bytes`` say (a baseline
 that adopts the optimizations under test stops being a baseline). The
 ``ChannelGroup`` enforces this whenever a custom ``send_frame`` is
-plugged in, and ``tests/test_wire_coalesce.py`` guards it.
+plugged in, and ``tests/test_wire_coalesce.py`` guards it. The same
+holds for egress reduction codecs (DESIGN.md §13): these engines never
+touch the :class:`~repro.core.client.Communicator`, so ``cfg.codec`` is
+structurally inert — baselines always ship raw bytes and report no
+codec stats (``tests/test_codec.py`` pins this).
 """
 from __future__ import annotations
 

@@ -108,6 +108,7 @@ class TransferSession:
         self._collect_channel_stats()
         self._collect_page_stats()
         self._collect_gateway_stats()
+        self._collect_codec_stats()
         t = time.perf_counter()
         try:
             self.transport.close()
@@ -187,6 +188,7 @@ class TransferSession:
             self.stats.to_staging_s = time.perf_counter() - self._t0
         self._unsynced = False
         self._collect_channel_stats()
+        self._collect_codec_stats()
         self._emit("sync")
 
     def drain(self, timeout: Optional[float] = None) -> None:
@@ -273,6 +275,18 @@ class TransferSession:
             return
         if gw:
             self.stats.gateway = gw
+
+    def _collect_codec_stats(self) -> None:
+        """Snapshot sender-side codec accounting (raw vs wire bytes,
+        encode time) into the stats (``cfg.codec != "none"`` only)."""
+        if self.cfg.codec == "none":
+            return
+        try:
+            cs = self.transport.codec_stats()
+        except Exception:  # noqa: BLE001 — stats must not break egress
+            return
+        if cs:
+            self.stats.codec = cs
 
     def _check_live(self) -> None:
         if not self._opened:

@@ -64,7 +64,9 @@ class StagedTransport(Transport):
                                  wire_format=self.cfg.wire_format,
                                  coalesce_bytes=self.cfg.coalesce_bytes,
                                  linger_ms=self.cfg.linger_ms,
-                                 gateway=gateway, tenant=self.cfg.tenant)
+                                 gateway=gateway, tenant=self.cfg.tenant,
+                                 codec=self.cfg.codec,
+                                 decode_at=self.cfg.decode_at)
         self._ctrl = wire.connect(addr)
         if gateway and self.cfg.tenant:
             # bind the control conn to the tenant for proxied/DDL ops
@@ -111,6 +113,11 @@ class StagedTransport(Transport):
             return self._ctrl_request({"op": "stats"}).get("pages") or {}
         except (RuntimeError, OSError):
             return {}
+
+    def codec_stats(self) -> dict:
+        """Sender-side codec accounting (raw vs wire bytes, encode time);
+        empty when ``cfg.codec == "none"``."""
+        return self.comm.codec_stats() if self.comm is not None else {}
 
     def gateway_stats(self) -> dict:
         """Fleet snapshot from the gateway ``stats`` op (placement,

@@ -90,6 +90,36 @@ def check_compressed_pod_reduce():
     print("check_compressed_pod_reduce OK", [round(l, 4) for l in losses])
 
 
+def check_compressed_reduce_nondivisible():
+    """Regression: compressed_pod_allreduce at ceil(n/QBLOCK) % n_pods != 0.
+
+    error_state row-pads to a multiple of n_pods; _flatten historically did
+    not, so `g + e` inside the shard_map body shape-mismatched whenever the
+    block-row count was not divisible by the pod count.
+    """
+    from repro.optim import grad_compress as gc
+    mesh = make_debug_mesh(2, 2, pod=2)
+    n_pods = mesh.shape["pod"]
+    rng = np.random.default_rng(7)
+    # 2*QBLOCK + 12 elements -> 3 block rows; 3 % 2 != 0 hits the bug.
+    tree = {"w": jnp.asarray(rng.standard_normal(2 * gc.QBLOCK + 5),
+                             jnp.float32),
+            "b": jnp.asarray(rng.standard_normal(7), jnp.float32)}
+    st = gc.error_state(tree, n_pods)
+    assert st.shape[0] % n_pods == 0 and st.shape[0] == 4
+    flat, pad = gc._flatten(tree, n_pods)
+    assert flat.shape == st.shape, (flat.shape, st.shape)
+    err = jnp.zeros(st.shape, st.dtype)
+    red, new_err = gc.compressed_pod_allreduce(tree, err, mesh)
+    assert new_err.shape == st.shape
+    # replicated input -> mean over pods == double-quantized round-trip
+    for k in tree:
+        x, y = np.asarray(tree[k]), np.asarray(red[k])
+        atol = 2.1 * np.abs(x).max() / 127.0   # RS + AG quant stages
+        assert np.allclose(x, y, rtol=0, atol=atol), k
+    print("check_compressed_reduce_nondivisible OK")
+
+
 def check_reshard_restore():
     """Checkpoint on a (1,4) mesh, restore on (4,1) and (2,2) — elastic."""
     import dataclasses
@@ -150,6 +180,7 @@ def check_seq_sharded_decode():
 
 CHECKS = {f.__name__: f for f in (
     check_sharded_equals_single, check_compressed_pod_reduce,
+    check_compressed_reduce_nondivisible,
     check_reshard_restore, check_seq_sharded_decode)}
 
 if __name__ == "__main__":

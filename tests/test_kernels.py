@@ -45,6 +45,56 @@ def test_pack_roundtrip_lossless_and_quantized():
     assert rel < 1e-2
 
 
+def test_unpack_respects_non_default_block_bytes():
+    # regression: unpack hardcoded tc=128 instead of asking tile_for_block
+    # for the dtype's lane width; round-trips must survive any block_bytes
+    # (geometry is recovered from the packed shape, not the default knob)
+    from repro.kernels.staging_pack import ops
+    y = jax.random.normal(jax.random.PRNGKey(2), (64, 192), jnp.bfloat16)
+    for block_bytes in (8 << 10, 16 << 10, 64 << 10):
+        b, s = ops.pack(y, block_bytes=block_bytes, impl="xla")
+        assert b.shape[1] * jnp.dtype(y.dtype).itemsize == block_bytes
+        out = ops.unpack(b, s, y.shape, block_bytes=block_bytes)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(y))
+        # unpack with a *different* block_bytes still round-trips: the
+        # packed shape carries the real geometry
+        out2 = ops.unpack(b, s, y.shape)
+        np.testing.assert_array_equal(np.asarray(out2), np.asarray(y))
+    # blocks whose width is not a multiple of the lane count are rejected
+    with pytest.raises(ValueError):
+        ops.unpack(jnp.zeros((2, 100), jnp.float32),
+                   jnp.ones((2,), jnp.float32), (200,))
+
+
+@pytest.mark.parametrize("n", [0, 1, 4096, 5000, 3 * 4096 + 17])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantize_blocks_bound_and_shapes(n, dtype):
+    from repro.kernels.staging_pack import ops
+    x = jax.random.normal(jax.random.PRNGKey(3), (n,), dtype) * 3.0
+    q, s = ops.quantize_blocks(x, block_elems=4096, impl="xla")
+    nb = -(-n // 4096)
+    assert q.shape == (nb, 4096) and q.dtype == jnp.int8
+    assert s.shape == (nb,) and s.dtype == jnp.float32
+    back = ops.dequantize_blocks(q, s, n, dtype=dtype)
+    xf = np.asarray(x, np.float32)
+    err = np.abs(np.asarray(back, np.float32) - xf)
+    # |x - dq| <= scale/2 per block (+ dtype rounding slack)
+    bound = np.repeat(np.asarray(s), 4096)[:n] * 0.5 + \
+        (1e-6 if dtype == jnp.float32 else 0.05)
+    assert n == 0 or bool((err <= bound + np.abs(xf) * 0.01).all())
+
+
+def test_quantize_blocks_pallas_matches_xla():
+    from repro.kernels.staging_pack import ops
+    x = jax.random.normal(jax.random.PRNGKey(4), (2 * 4096 + 100,),
+                          jnp.float32)
+    qx, sx = ops.quantize_blocks(x, impl="xla")
+    qp, sp = ops.quantize_blocks(x, impl="pallas", interpret=True)
+    np.testing.assert_allclose(np.asarray(sp), np.asarray(sx), rtol=1e-6)
+    diff = np.abs(np.asarray(qp, np.int32) - np.asarray(qx, np.int32))
+    assert diff.max() <= 1 and (diff != 0).mean() < 1e-3
+
+
 # ---------------------------------------------------------------------------
 # flash_attention
 # ---------------------------------------------------------------------------
