@@ -98,6 +98,19 @@ class PageStore:
     (forward).
     """
 
+    _GUARDED_BY = {
+        "_free": "_lock",
+        "_lru": "_lock",
+        "_n_evictable": "_lock",
+        "_by_digest": "_lock",
+        "_spill_files": "_lock",
+        "_seq": "_lock",
+        "_closed": "_lock",
+        "counters": "_lock",
+        "_mm": "_lock",
+        "_view": "_lock",
+    }
+
     def __init__(self, capacity: int, page_bytes: int = DEFAULT_PAGE_BYTES,
                  mem_dir: str = "/dev/shm", spill_dir: str = "/tmp",
                  dedup: bool = False):
@@ -159,7 +172,7 @@ class PageStore:
                 (self.n_frames - len(self._free)) * self.page_bytes)
         return table
 
-    def _reclaim(self, n: int) -> None:
+    def _reclaim(self, n: int) -> None:  # holds: self._lock
         """Evict cold sealed pages until >= n frames are free (locked)."""
         while len(self._free) < n:
             victim = next((p for p in self._lru if p.pins == 0), None)
@@ -169,7 +182,7 @@ class PageStore:
                     "evictable (all resident pages unsealed or pinned)")
             self._evict(victim)
 
-    def _evict(self, phys: _PhysPage) -> None:
+    def _evict(self, phys: _PhysPage) -> None:  # holds: self._lock
         path = os.path.join(
             self.spill_dir, f"page-{os.getpid()}-{id(phys):x}")
         base = phys.frame * self.page_bytes
@@ -183,7 +196,7 @@ class PageStore:
         self.counters["spill_outs"] += 1
         self.counters["spill_bytes_out"] += phys.used
 
-    def _promote(self, phys: _PhysPage) -> None:
+    def _promote(self, phys: _PhysPage) -> None:  # holds: self._lock
         """Pull one spilled page back into a frame (locked)."""
         self._reclaim(1)
         frame = self._free.pop()
@@ -203,19 +216,19 @@ class PageStore:
             (self.n_frames - len(self._free)) * self.page_bytes)
 
     # -- LRU bookkeeping (locked) ---------------------------------------
-    def _lru_insert(self, phys: _PhysPage) -> None:
+    def _lru_insert(self, phys: _PhysPage) -> None:  # holds: self._lock
         if phys not in self._lru:
             self._lru[phys] = None
             if phys.pins == 0:
                 self._n_evictable += 1
 
-    def _lru_remove(self, phys: _PhysPage) -> None:
+    def _lru_remove(self, phys: _PhysPage) -> None:  # holds: self._lock
         if phys in self._lru:
             del self._lru[phys]
             if phys.pins == 0:
                 self._n_evictable = max(0, self._n_evictable - 1)
 
-    def _touch(self, phys: _PhysPage) -> None:
+    def _touch(self, phys: _PhysPage) -> None:  # holds: self._lock
         if phys in self._lru:
             self._lru.move_to_end(phys)
 
@@ -295,7 +308,7 @@ class PageStore:
                     self._n_evictable += 1
 
     # -- data access -----------------------------------------------------
-    def _span(self, table: PageTable, offset: int, size: int):
+    def _span(self, table: PageTable, offset: int, size: int):  # holds: self._lock
         """Yield (phys, in-page offset, length) covering [offset, offset+size)."""
         if offset < 0 or offset + size > table.nbytes:
             raise ValueError(f"range [{offset},{offset + size}) outside "

@@ -20,6 +20,8 @@ from typing import Any, Callable, Optional
 
 
 class TaskHandle:
+    _GUARDED_BY = {"_callbacks": "_lock"}
+
     def __init__(self, fn: Callable, args: tuple, name: str):
         self.fn = fn
         self.args = args
@@ -74,6 +76,17 @@ class TaskHandle:
 
 class FCFSPool:
     """Fixed pool of worker threads consuming a FIFO queue."""
+
+    # aggregate counters share _pending_lock because _worker updates them
+    # in the same critical section that decrements _pending
+    _GUARDED_BY = {
+        "_inflight": "_inflight_lock",
+        "_pending": "_pending_lock",
+        "n_completed": "_pending_lock",
+        "n_failed": "_pending_lock",
+        "_lat_sum": "_pending_lock",
+        "_lat_count": "_pending_lock",
+    }
 
     def __init__(self, n_threads: int, name: str = "pool",
                  straggler_timeout: Optional[float] = None,
@@ -158,6 +171,13 @@ class FCFSPool:
             remaining = None if deadline is None else \
                 max(deadline - time.monotonic(), 0.0)
             t.join(remaining)
+        if self._watchdog is not None \
+                and self._watchdog is not threading.current_thread():
+            # _stop is set, so the watchdog's wait() returns within
+            # straggler_timeout/4 — bound the join the same way anyway
+            remaining = None if deadline is None else \
+                max(deadline - time.monotonic(), 0.0)
+            self._watchdog.join(remaining)
         for fn in self._stop_callbacks:
             try:
                 fn()

@@ -53,6 +53,15 @@ def _parse_call(q: str) -> tuple[str, list[str]]:
 class SavimeEngine:
     """In-process engine (the TCP server wraps this)."""
 
+    # enforced by `python -m repro.lint` (DESIGN.md §14); _lock is an
+    # RLock so query handlers can nest under run()
+    _GUARDED_BY = {
+        "tars": "_lock",
+        "datasets": "_lock",
+        "_listeners": "_lock",
+        "stats": "_lock",
+    }
+
     def __init__(self):
         self.tars: dict[str, TAR] = {}
         self.datasets: dict[str, np.ndarray] = {}
@@ -88,9 +97,19 @@ class SavimeEngine:
             self.stats["bytes_ingested"] += arr.nbytes
             self.stats["datasets"] += 1
 
+    # -- stat snapshots (the server must not read `stats` unlocked) --------
+    def subtar_seq(self) -> int:
+        with self._lock:
+            return self.stats["subtars"]
+
+    def stats_snapshot(self) -> dict:
+        with self._lock:
+            return dict(self.stats)
+
     # -- query language ------------------------------------------------------
     def run(self, q: str) -> Any:
-        self.stats["queries"] += 1
+        with self._lock:
+            self.stats["queries"] += 1
         fn, args = _parse_call(q)
         handler = getattr(self, f"_q_{fn}", None)
         if handler is None:
@@ -122,9 +141,11 @@ class SavimeEngine:
         o = tuple(int(x) for x in origin.split(","))
         s = tuple(int(x) for x in shape.split(","))
         t.load_subtar(o, s, {attr: arr})
-        self.stats["subtars"] += 1
+        with self._lock:
+            self.stats["subtars"] += 1
+            seq = self.stats["subtars"]
         self._notify({"tar": tar, "origin": list(o), "shape": list(s),
-                      "attr": attr, "seq": self.stats["subtars"]})
+                      "attr": attr, "seq": seq})
         return "ok"
 
     def _q_select(self, tar: str, attr: str, lo: str = "", hi: str = ""):
@@ -177,6 +198,11 @@ class SavimeServer:
     without analytical clients polling ``select``.
     """
 
+    _GUARDED_BY = {
+        "_threads": "_threads_lock",
+        "_conns": "_conn_lock",
+    }
+
     def __init__(self, host: str = "127.0.0.1", port: int = 0):
         self.engine = SavimeEngine()
         self._srv = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
@@ -185,7 +211,10 @@ class SavimeServer:
         self._srv.listen(64)
         self.addr = f"{host}:{self._srv.getsockname()[1]}"
         self._stop = threading.Event()
+        # appended by the accept loop, walked by stop()/live_threads() —
+        # the same prune-while-join race StagingServer fixed in PR 7
         self._threads: list[threading.Thread] = []
+        self._threads_lock = threading.Lock()
         self._conns: set[socket.socket] = set()
         self._conn_lock = threading.Lock()
         self._accept_thread: Optional[threading.Thread] = None
@@ -218,12 +247,16 @@ class SavimeServer:
         if self._accept_thread is not None:
             self._accept_thread.join(join_timeout)
         deadline = time.monotonic() + join_timeout
-        for t in self._threads:
+        with self._threads_lock:
+            threads = list(self._threads)
+        for t in threads:
             t.join(max(deadline - time.monotonic(), 0.0))
-        self._threads = [t for t in self._threads if t.is_alive()]
+        with self._threads_lock:
+            self._threads = [t for t in self._threads if t.is_alive()]
 
     def live_threads(self) -> int:
-        return sum(t.is_alive() for t in self._threads)
+        with self._threads_lock:
+            return sum(t.is_alive() for t in self._threads)
 
     def _accept_loop(self) -> None:
         while not self._stop.is_set():
@@ -233,11 +266,12 @@ class SavimeServer:
                 return
             # prune finished connection threads so a long-running server
             # stays bounded by *live* connections, not total ever accepted
-            self._threads = [t for t in self._threads if t.is_alive()]
-            t = threading.Thread(target=self._serve, args=(conn,),
-                                 name="savime-conn", daemon=True)
-            t.start()
-            self._threads.append(t)
+            with self._threads_lock:
+                self._threads = [t for t in self._threads if t.is_alive()]
+                t = threading.Thread(target=self._serve, args=(conn,),
+                                     name="savime-conn", daemon=True)
+                t.start()
+                self._threads.append(t)
 
     def _serve(self, conn: socket.socket) -> None:
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
@@ -256,7 +290,8 @@ class SavimeServer:
                     try:
                         reply, data = self._handle(header, payload)
                     except Exception as e:  # noqa: BLE001 — report to client
-                        reply, data = {"ok": False, "error": str(e)}, None
+                        reply, data = {"ok": False, "error": str(e),
+                                       "code": "error"}, None
                     try:
                         wire.send_frame(conn, reply, data)
                     except OSError:
@@ -294,7 +329,7 @@ class SavimeServer:
             # thread: a stalled send times out and ends the subscription
             conn.settimeout(30.0)
             wire.send_frame(conn, {"ok": True, "tar": pattern,
-                                   "seq": self.engine.stats["subtars"]})
+                                   "seq": self.engine.subtar_seq()})
             while not self._stop.is_set():
                 try:
                     ev = events.get(timeout=0.25)
@@ -329,7 +364,7 @@ class SavimeServer:
                         "shape": list(res.shape)}, memoryview(res).cast("B")
             return {"ok": True, "result": res}, None
         if op == "stats":
-            return {"ok": True, **self.engine.stats}, None
+            return {"ok": True, **self.engine.stats_snapshot()}, None
         raise SavimeError(f"unknown op {op!r}")
 
 
@@ -347,7 +382,9 @@ class SavimeClient:
         (deprecated as a user API — kept as wire plumbing; DESIGN.md §8)."""
         if hasattr(q, "compile"):
             q = q.compile()
-        with self._lock:
+        # _lock deliberately serialises whole request/reply round-trips on
+        # this one socket — that's its job (same for every ignore below)
+        with self._lock:  # lint: ignore[io-under-lock]
             header, payload = wire.request(self._sock, {"op": "query", "q": q})
         if not header.get("ok"):
             raise SavimeError(header.get("error", "?"))
@@ -356,7 +393,7 @@ class SavimeClient:
         return header.get("result")
 
     def load_dataset(self, name: str, dtype: str, payload) -> None:
-        with self._lock:
+        with self._lock:  # lint: ignore[io-under-lock]
             header, _ = wire.request(
                 self._sock, {"op": "load_dataset", "name": name,
                              "dtype": dtype}, payload)
@@ -367,7 +404,7 @@ class SavimeClient:
                                count: int) -> None:
         """Zero-copy ingest path: sendfile(2)/splice from a (tmpfs) file
         straight into the SAVIME socket — the paper's staging→SAVIME hop."""
-        with self._lock:
+        with self._lock:  # lint: ignore[io-under-lock]
             wire.send_frame_from_file(
                 self._sock, {"op": "load_dataset", "name": name,
                              "dtype": dtype}, fd, count)
@@ -385,7 +422,7 @@ class SavimeClient:
         if total != count:
             raise SavimeError(
                 f"page views cover {total} bytes, dataset is {count}")
-        with self._lock:
+        with self._lock:  # lint: ignore[io-under-lock]
             wire.sendmsg_all(self._sock, wire.encode_frame(
                 {"op": "load_dataset", "name": name, "dtype": dtype},
                 list(views)))
@@ -394,7 +431,7 @@ class SavimeClient:
             raise SavimeError(header.get("error", "?"))
 
     def stats(self) -> dict:
-        with self._lock:
+        with self._lock:  # lint: ignore[io-under-lock]
             header, _ = wire.request(self._sock, {"op": "stats"})
         return header
 

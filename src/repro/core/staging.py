@@ -30,6 +30,7 @@ windows recover without waiting for the next ack.
 """
 from __future__ import annotations
 
+import logging
 import math
 import os
 import secrets
@@ -41,9 +42,11 @@ from typing import Optional
 from repro import codec as codec_mod
 from repro.core import wire
 from repro.core.pagestore import PageStore, PageStoreFull
-from repro.core.queues import FCFSPool
+from repro.core.queues import FCFSPool, TaskHandle
 from repro.core.rdma import MemoryRegion, PagedMemoryRegion
 from repro.core.savime import SavimeClient
+
+log = logging.getLogger(__name__)
 
 
 class _Dataset:
@@ -72,6 +75,22 @@ class _Dataset:
 
 
 class StagingServer:
+    # lock->attribute protection map, enforced by `python -m repro.lint`
+    # (DESIGN.md §14).  The plain-counter `stats` dict is deliberately
+    # unguarded: increments are best-effort telemetry and the `stats` op
+    # snapshots the authoritative watermarks under their own locks.
+    _GUARDED_BY = {
+        "_mem_used": "_alloc_lock",
+        "_disk_used": "_alloc_lock",
+        "_datasets": "_ds_lock",
+        "_threads": "_threads_lock",
+        "_conns": "_conn_lock",
+        "_push_conns": "_conn_lock",
+        "_decoders": "_codec_mutex",
+        "_parked": "_codec_mutex",
+        "_fwd_tails": "_codec_mutex",
+    }
+
     def __init__(self, savime_addr: str, host: str = "127.0.0.1",
                  port: int = 0, mem_capacity: int = 1 << 30,
                  mem_dir: Optional[str] = None,
@@ -127,6 +146,11 @@ class StagingServer:
         self._decoders: dict[str, codec_mod.Codec] = {}
         self._codec_mutex = threading.Lock()
         self._parked: dict[tuple[str, int], _Dataset] = {}
+        # chained datasets share a SAVIME name across links, so their
+        # forwards must reach SAVIME in decode order even across the
+        # send pool's threads: each queued forward for a name waits on
+        # the previous one's handle (FIFO dequeue makes that safe)
+        self._fwd_tails: dict[str, TaskHandle] = {}
         # bin1 data connections eligible for proactive credit pushes:
         # conn -> the send lock shared with its serve thread
         self._push_conns: dict[socket.socket, threading.Lock] = {}
@@ -277,8 +301,11 @@ class StagingServer:
                             counted = True
                         if op in ("stripe", "batch_write"):
                             # these handlers receive their own payload —
-                            # straight into the mmap'd region(s)
-                            if is_bin and conn not in self._push_conns:
+                            # straight into the mmap'd region(s).
+                            # _register_push_conn re-checks membership under
+                            # _conn_lock (an unlocked pre-check here raced
+                            # the pop in _serve's finally)
+                            if is_bin:
                                 self._register_push_conn(conn, send_lock)
                             try:
                                 if op == "stripe":
@@ -293,7 +320,9 @@ class StagingServer:
                                 # closed by stop() mid-transfer): report
                                 # it, then drop the conn — the payload may
                                 # not be fully consumed, so framing is gone
-                                _reply({"ok": False, "error": str(e)},
+                                log.debug("ingest op %r failed: %s", op, e)
+                                _reply({"ok": False, "error": str(e),
+                                        "code": "ingest_failed"},
                                        is_bin)
                                 return
                         elif op == "batch_open":
@@ -306,13 +335,18 @@ class StagingServer:
                                 reply = self._op_batch_open(header)
                                 conn_state["batch"] = reply.pop("_ids")
                             except Exception as e:  # noqa: BLE001
-                                reply = {"ok": False, "error": str(e)}
+                                log.debug("batch_open failed: %s", e)
+                                reply = {"ok": False, "error": str(e),
+                                         "code": "open_failed"}
                         else:
                             payload = wire.recv_payload(conn, header, pool)
                             try:
                                 reply = self._handle(header, payload)
                             except Exception as e:  # noqa: BLE001
-                                reply = {"ok": False, "error": str(e)}
+                                log.debug("op %r failed: %s",
+                                          header.get("op"), e)
+                                reply = {"ok": False, "error": str(e),
+                                         "code": "error"}
                             finally:
                                 # no generic op retains its payload past
                                 # the handler — return the lease
@@ -545,7 +579,7 @@ class StagingServer:
         declared = int(h.get("nbytes") or 0)
         if ids is None:
             wire.drain_payload(conn, h)
-            return {"ok": False, "error":
+            return {"ok": False, "code": "bad_request", "error":
                     "batch_write without a preceding successful batch_open"}
         with self._ds_lock:
             dss = [self._datasets.get(fid) for fid in ids]
@@ -555,7 +589,7 @@ class StagingServer:
             wire.drain_payload(conn, h)
             for fid in ids:
                 self._release_reservation(fid)
-            return {"ok": False, "error":
+            return {"ok": False, "code": "bad_request", "error":
                     f"batch_write mismatch (count={count}, "
                     f"declared={declared} bytes)"}
         done = 0
@@ -610,7 +644,7 @@ class StagingServer:
                                name=f"send-{ds.name}")
 
     # -- egress-codec decode (DESIGN.md §13) ------------------------------
-    def _decoder(self, name: str) -> codec_mod.Codec:
+    def _decoder(self, name: str) -> codec_mod.Codec:  # holds: self._codec_mutex
         dec = self._decoders.get(name)
         if dec is None:
             dec = self._decoders[name] = codec_mod.create(name)
@@ -648,20 +682,49 @@ class StagingServer:
                     self._parked[(pending.name, e.base)] = pending
                     self.stats["codec_parked"] += 1
                     return
-                except Exception:
+                except Exception as e:
                     # corrupt payload: the region must not leak while the
                     # error surfaces to the client
+                    log.debug("codec %r decode of %r failed: %s",
+                              pending.codec, pending.name, e)
                     with self._ds_lock:
                         self._datasets.pop(pending.file_id, None)
                     self._free_dataset(pending)
                     raise
                 self._swap_region(pending, raw)
                 self.stats["codec_datasets"] += 1
-                self._send_pool.submit(self._send_to_savime, pending,
-                                       name=f"send-{pending.name}")
+                self._submit_ordered(pending)
                 seq = (pending.cmeta or {}).get("seq")
                 pending = (self._parked.pop((pending.name, seq), None)
                            if seq is not None else None)
+
+    def _submit_ordered(self, ds: _Dataset) -> None:  # holds: self._codec_mutex
+        """Queue a decoded dataset's forward behind the previous forward
+        queued for the same SAVIME name.
+
+        Chained links decode in order under _codec_mutex, but the send
+        pool has several workers: two same-name forwards could otherwise
+        race and SAVIME's last-write-wins would keep the older link.  The
+        wait cannot deadlock: a task only ever waits on one submitted
+        *earlier*, and FIFO dequeue means the oldest unfinished task is
+        never stuck behind a waiter."""
+        prev = self._fwd_tails.get(ds.name)
+        handle = self._send_pool.submit(self._send_after, ds, prev,
+                                        name=f"send-{ds.name}")
+        self._fwd_tails[ds.name] = handle
+        if len(self._fwd_tails) > 64:
+            self._fwd_tails = {n: h for n, h in self._fwd_tails.items()
+                               if not h.done.is_set()}
+
+    def _send_after(self, ds: _Dataset, prev: Optional[TaskHandle]) -> None:
+        if prev is not None:
+            # wait for completion, success *or* failure — ordering is the
+            # only contract; poll so stop() (which abandons queued tasks,
+            # leaving their handles forever pending) cannot wedge a worker
+            while not prev.done.wait(0.05):
+                if self._stop.is_set():
+                    return
+        self._send_to_savime(ds)
 
     def _swap_region(self, ds: _Dataset, raw) -> None:
         """Replace the dataset's wire-size storage with its decoded bytes:
@@ -787,7 +850,7 @@ class StagingServer:
                     f"[0,{ds.nbytes})")
         except (KeyError, ValueError, TypeError) as e:
             wire.drain_payload(conn, h)       # keep the stream framed
-            return {"ok": False, "error": str(e)}
+            return {"ok": False, "error": str(e), "code": "bad_request"}
         grant = self._credit_grant(ds.credits_wanted)
         if dup:
             # duplicate (retry / speculative re-send): ack idempotently,

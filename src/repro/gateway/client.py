@@ -41,7 +41,9 @@ class GatewayClient:
     def _request(self, header: dict) -> dict:
         if self.tenant and "tenant" not in header:
             header = dict(header, tenant=self.tenant)
-        with self._lock:
+        # the lock serializes request/reply pairs on the one control
+        # conn — blocking under it is the point
+        with self._lock:  # lint: ignore[io-under-lock]
             h, _ = wire.request(self._sock, header)
         if not h.get("ok"):
             raise error_from_reply(h, f"gateway {header.get('op')} failed")

@@ -80,6 +80,16 @@ class Backend:
 class GatewayServer:
     """TCP front-end multiplexing the staging wire protocol over a pool."""
 
+    # ``stats`` is deliberately unguarded: plain int-counter bumps under
+    # the GIL, read only by the stats op (monitoring tolerates torn reads).
+    _GUARDED_BY = {
+        "ring": "_lock",
+        "_file_map": "_lock",
+        "_ds_map": "_lock",
+        "_threads": "_threads_lock",
+        "_conns": "_conn_lock",
+    }
+
     def __init__(self, nodes: Iterable[RingNode], host: str = "127.0.0.1",
                  port: int = 0, *, tenants: Iterable[Tenant] = (),
                  default_quota_bytes: Optional[int] = None,
@@ -175,7 +185,7 @@ class GatewayServer:
             return sum(t.is_alive() for t in self._threads)
 
     # -- ring / placement -----------------------------------------------
-    def _rebuild_ring(self) -> None:
+    def _rebuild_ring(self) -> None:  # holds: self._lock
         """Swap in a ring over the currently-live backends (caller holds
         ``_lock``)."""
         live = [b.node for b in self.backends.values() if b.alive]
@@ -355,7 +365,7 @@ class GatewayServer:
         try:
             sock = self._backend_conn(state, bname)
         except OSError as e:
-            return {"ok": False,
+            return {"ok": False, "code": "backend_unreachable",
                     "error": f"backend {bname!r} unreachable: {e}"}
         try:
             if isinstance(payload, (list, tuple)):
@@ -370,7 +380,7 @@ class GatewayServer:
                 sock.close()
             except OSError:
                 pass
-            return {"ok": False,
+            return {"ok": False, "code": "backend_unreachable",
                     "error": f"backend {bname!r} unreachable: {e}"}
 
     # -- op dispatch ------------------------------------------------------
@@ -483,7 +493,7 @@ class GatewayServer:
         with self._lock:
             ent = self._file_map.get(h.get("file_id"))
         if ent is None:
-            return {"ok": False,
+            return {"ok": False, "code": "bad_request",
                     "error": f"unknown file_id {h.get('file_id')!r}"}
         bname, _wanted = ent
         rep = self._forward(state, bname, h)
@@ -503,7 +513,7 @@ class GatewayServer:
             ent = self._file_map.get(h.get("file_id"))
         if ent is None:
             wire.drain_payload(conn, h)
-            return {"ok": False,
+            return {"ok": False, "code": "bad_request",
                     "error": f"unknown file_id {h.get('file_id')!r}"}
         bname, wanted = ent
         payload = None
@@ -563,13 +573,13 @@ class GatewayServer:
         declared = int(h.get("nbytes") or 0)
         if binfo is None:
             wire.drain_payload(conn, h)
-            return {"ok": False, "error":
+            return {"ok": False, "code": "bad_request", "error":
                     "batch_write without a preceding successful batch_open"}
         items, groups = binfo
         sizes = [int(it.get("size", 0)) for it in items]
         if int(h.get("count", -1)) != len(items) or sum(sizes) != declared:
             wire.drain_payload(conn, h)
-            return {"ok": False, "error":
+            return {"ok": False, "code": "bad_request", "error":
                     f"batch_write mismatch (count={h.get('count')}, "
                     f"declared={declared} bytes)"}
         bufs: list[bytearray] = []

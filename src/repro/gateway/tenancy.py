@@ -48,12 +48,10 @@ class AuthError(RuntimeError):
 
 
 def error_reply(exc: BaseException) -> dict:
-    """Wire form of a (possibly typed) rejection."""
-    out = {"ok": False, "error": str(exc)}
-    code = getattr(exc, "code", None)
-    if code:
-        out["code"] = code
-    return out
+    """Wire form of a (possibly typed) rejection.  Untyped exceptions
+    still get a ``code`` ("error") so every error reply is taggable."""
+    code = getattr(exc, "code", None) or "error"
+    return {"ok": False, "error": str(exc), "code": code}
 
 
 def error_from_reply(h: dict, prefix: str = "staging error") -> Exception:
@@ -86,6 +84,12 @@ class TenantRegistry:
     ``require_auth=True`` a missing/unknown token is an
     :class:`AuthError` — the hardened multi-tenant posture.
     """
+
+    _GUARDED_BY = {
+        "_tenants": "_lock",
+        "_by_token": "_lock",
+        "_usage": "_lock",
+    }
 
     def __init__(self, tenants: Iterable[Tenant] = (), *,
                  default_quota_bytes: Optional[int] = None,

@@ -1,0 +1,39 @@
+"""reprolint — project-invariant static analysis for the in-transit stack.
+
+The reproduction buys the paper's no-copy/no-context-switch win with
+heavy concurrency (~60 threading primitives across the transport, core
+and gateway layers), and every PR since the striped channels landed has
+shipped hand-found race fixes.  This package turns those one-off fixes
+into machine-checked invariants (DESIGN.md §14):
+
+  * ``guarded-by``      — classes declare which lock protects which
+                          attribute (``_GUARDED_BY`` map or ``# guarded
+                          by: self._lock`` trailing comments); any access
+                          outside the owning lock is a finding.
+  * ``lock-order``      — nested ``with``-acquisitions build a global
+                          lock graph; cycles are static deadlocks.
+  * ``thread-join``     — every ``threading.Thread`` a class starts must
+                          be joined (or registered for join) by its
+                          ``stop()``/``close()``.
+  * ``socket-close``    — sockets created and never handed off must be
+                          closed on all paths (``with`` / ``finally``).
+  * ``dispatch-return`` — every wire-dispatch handler (``_handle*`` /
+                          ``_op_*``) replies on all control-flow paths.
+  * ``error-code``      — wire error replies carry a typed ``code`` tag.
+  * hygiene bans        — ``bare-except``, ``mutable-default``,
+                          ``sleep-under-lock`` / ``io-under-lock``.
+
+Run it with ``python -m repro.lint src/`` (``--strict`` for CI).  The
+runtime half (:mod:`repro.lint.runtime`) wraps ``threading.Lock`` /
+``RLock`` behind ``REPRO_LOCKCHECK=1`` and records per-thread
+acquisition order during tier-1, failing on any inversion the static
+graph did not predict.
+
+Suppressions are per line: ``# lint: ignore[rule-id]`` (or a blanket
+``# lint: ignore``).  Grandfathered findings live in a committed
+baseline file (target: empty) — see ``--baseline`` / ``--write-baseline``.
+"""
+from repro.lint.engine import lint_paths
+from repro.lint.findings import Baseline, Finding
+
+__all__ = ["lint_paths", "Finding", "Baseline"]

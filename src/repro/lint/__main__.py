@@ -1,0 +1,76 @@
+"""CLI: ``python -m repro.lint [paths...] [--strict] [--json] ...``.
+
+Exit codes: 0 — clean (or all findings baselined); 1 — non-baselined
+findings in ``--strict`` mode; 2 — bad invocation.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.lint.engine import lint_paths
+from repro.lint.findings import Baseline
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.lint",
+        description="Project-invariant static analysis for the in-transit stack.",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"], help="files or directories (default: src)")
+    ap.add_argument("--strict", action="store_true", help="exit 1 on any non-baselined finding")
+    ap.add_argument("--json", action="store_true", dest="as_json", help="emit findings as JSON")
+    ap.add_argument("--baseline", default="lint-baseline.json", help="baseline file (default: lint-baseline.json)")
+    ap.add_argument("--no-baseline", action="store_true", help="ignore the baseline file")
+    ap.add_argument("--write-baseline", action="store_true", help="write current findings to the baseline and exit 0")
+    ap.add_argument("--rules", help="comma-separated rule ids to run (default: all)")
+    args = ap.parse_args(argv)
+
+    rules = None
+    if args.rules:
+        rules = {r.strip() for r in args.rules.split(",") if r.strip()}
+
+    findings = lint_paths(args.paths or ["src"], rules=rules)
+
+    if args.write_baseline:
+        Baseline.write(args.baseline, findings)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    baseline = Baseline() if args.no_baseline else Baseline.load(args.baseline)
+    new, old, stale = baseline.split(findings)
+
+    if args.as_json:
+        print(
+            json.dumps(
+                {
+                    "findings": [f.to_json() for f in new],
+                    "baselined": [f.to_json() for f in old],
+                    "stale_baseline_entries": stale,
+                },
+                indent=2,
+            )
+        )
+    else:
+        for f in new:
+            print(f.render())
+        if old:
+            print(f"-- {len(old)} baselined finding(s) suppressed", file=sys.stderr)
+        for e in stale:
+            print(
+                f"-- stale baseline entry (fixed? run --write-baseline): "
+                f"{e.get('rule')}: {e.get('path')}: {e.get('message')}",
+                file=sys.stderr,
+            )
+        if not new:
+            print(f"repro.lint: clean ({len(findings)} finding(s) total)", file=sys.stderr)
+
+    if new and args.strict:
+        print(f"repro.lint: {len(new)} non-baselined finding(s)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,247 @@
+"""Per-file analysis context: AST, trailing comments, class lock metadata.
+
+Annotation syntax recognised here (see DESIGN.md §14):
+
+* ``_GUARDED_BY = {"_attr": "_lock", ...}`` — class-level dict literal
+  mapping attribute name -> owning lock attribute.
+* ``self._attr = ... # guarded by: self._lock`` — trailing comment on an
+  assignment anywhere in the class; equivalent to a ``_GUARDED_BY`` entry.
+* ``def _helper(self): # holds: self._lock`` — trailing comment on a
+  ``def`` line declaring that every caller already holds those locks
+  (comma-separated); the method is analysed with them pre-held, and its
+  own acquisitions of them are not re-counted for lock ordering.
+* ``# lint: ignore[rule-a,rule-b]`` / ``# lint: ignore`` — per-line
+  suppression.  On a ``with <lock>:`` line it also suppresses
+  ``*-under-lock`` findings for calls made while that block holds the lock.
+"""
+from __future__ import annotations
+
+import ast
+import io
+import re
+import tokenize
+from dataclasses import dataclass, field
+from pathlib import Path
+
+LOCK_FACTORIES = {"Lock", "RLock", "Condition", "Semaphore", "BoundedSemaphore"}
+REENTRANT_FACTORIES = {"RLock", "Condition"}  # Condition() wraps an RLock
+
+_GUARDED_RE = re.compile(r"guarded\s+by:\s*self\.(\w+)")
+_HOLDS_RE = re.compile(r"holds:\s*((?:self\.\w+\s*,?\s*)+)")
+_IGNORE_RE = re.compile(r"lint:\s*ignore(?:\[([\w\-, ]*)\])?")
+
+
+@dataclass
+class ClassInfo:
+    name: str
+    node: ast.ClassDef
+    lock_attrs: set[str] = field(default_factory=set)
+    reentrant: set[str] = field(default_factory=set)  # subset of lock_attrs
+    guard_map: dict[str, str] = field(default_factory=dict)  # attr -> lock attr
+    holds: dict[str, frozenset] = field(default_factory=dict)  # method -> locks
+
+    def methods(self):
+        for stmt in self.node.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield stmt
+
+
+class FileContext:
+    def __init__(self, path: str | Path, source: str | None = None):
+        self.path = Path(path)
+        self.source = source if source is not None else self.path.read_text()
+        self.tree = ast.parse(self.source, filename=str(self.path))
+        self.comments: dict[int, str] = {}
+        self._ignores: dict[int, set[str] | None] = {}  # line -> rules (None = all)
+        self._scan_comments()
+        self.classes: list[ClassInfo] = [
+            self._class_info(n) for n in ast.walk(self.tree) if isinstance(n, ast.ClassDef)
+        ]
+
+    # -- comments / suppressions ------------------------------------------
+    def _scan_comments(self) -> None:
+        try:
+            toks = tokenize.generate_tokens(io.StringIO(self.source).readline)
+            for tok in toks:
+                if tok.type == tokenize.COMMENT:
+                    line = tok.start[0]
+                    self.comments[line] = tok.string
+                    m = _IGNORE_RE.search(tok.string)
+                    if m:
+                        rules = m.group(1)
+                        if rules is None or not rules.strip():
+                            self._ignores[line] = None
+                        else:
+                            self._ignores[line] = {r.strip() for r in rules.split(",") if r.strip()}
+        except tokenize.TokenError:
+            pass
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        rules = self._ignores.get(line, ...)
+        if rules is ...:
+            return False
+        return rules is None or rule in rules
+
+    # -- class metadata ---------------------------------------------------
+    def _class_info(self, node: ast.ClassDef) -> ClassInfo:
+        info = ClassInfo(name=node.name, node=node)
+        # class-level _GUARDED_BY dict literal
+        for stmt in node.body:
+            if (
+                isinstance(stmt, ast.Assign)
+                and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and stmt.targets[0].id == "_GUARDED_BY"
+                and isinstance(stmt.value, ast.Dict)
+            ):
+                for k, v in zip(stmt.value.keys, stmt.value.values):
+                    if isinstance(k, ast.Constant) and isinstance(v, ast.Constant):
+                        info.guard_map[str(k.value)] = str(v.value)
+        for meth in info.methods():
+            m = _HOLDS_RE.search(self.comments.get(meth.lineno, ""))
+            if m:
+                info.holds[meth.name] = frozenset(
+                    w.split(".")[1] for w in re.findall(r"self\.\w+", m.group(1))
+                )
+            for sub in ast.walk(meth):
+                # self.X = threading.Lock()/RLock()/Condition(...) anywhere
+                if isinstance(sub, ast.Assign) and len(sub.targets) == 1:
+                    tgt = sub.targets[0]
+                    if (
+                        isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"
+                    ):
+                        fac = _lock_factory(sub.value)
+                        if fac:
+                            info.lock_attrs.add(tgt.attr)
+                            if fac in REENTRANT_FACTORIES:
+                                info.reentrant.add(tgt.attr)
+                        # trailing "# guarded by: self._lock" comment
+                        gm = _GUARDED_RE.search(self.comments.get(sub.lineno, ""))
+                        if gm:
+                            info.guard_map[tgt.attr] = gm.group(1)
+        # guard-map values count as lock attrs even without a visible factory
+        info.lock_attrs.update(info.guard_map.values())
+        return info
+
+
+def _lock_factory(value: ast.expr) -> str | None:
+    if (
+        isinstance(value, ast.Call)
+        and isinstance(value.func, ast.Attribute)
+        and isinstance(value.func.value, ast.Name)
+        and value.func.value.id == "threading"
+        and value.func.attr in LOCK_FACTORIES
+    ):
+        return value.func.attr
+    return None
+
+
+def self_lock_in_with(item: ast.withitem, lock_attrs: set[str]) -> str | None:
+    """Return the lock attr name if this with-item acquires a self lock."""
+    e = item.context_expr
+    if (
+        isinstance(e, ast.Attribute)
+        and isinstance(e.value, ast.Name)
+        and e.value.id == "self"
+        and e.attr in lock_attrs
+    ):
+        return e.attr
+    return None
+
+
+def walk_held(
+    func: ast.FunctionDef,
+    cls: ClassInfo,
+    on_node=None,
+    on_acquire=None,
+) -> None:
+    """Walk ``func`` tracking which of ``cls``'s locks are held.
+
+    ``on_node(node, held)`` fires for every expression/statement node with
+    ``held`` mapping lock attr -> line of the acquiring ``with``
+    (annotation-held locks map to the ``def`` line).  ``on_acquire(with_node,
+    acquired_attrs, held_before)`` fires at each self-lock ``with``.
+    Nested function definitions are not entered — the engine analyses them
+    as separate functions with an empty held set.
+    """
+    initial = {a: func.lineno for a in cls.holds.get(func.name, frozenset())}
+
+    def visit_expr(node: ast.AST, held: dict) -> None:
+        stack = [node]
+        while stack:
+            sub = stack.pop()
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                continue  # analysed separately, with an empty held set
+            if on_node:
+                on_node(sub, held)
+            stack.extend(ast.iter_child_nodes(sub))
+
+    def visit_stmts(stmts, held: dict) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if isinstance(stmt, ast.With):
+                acquired = {}
+                for item in stmt.items:
+                    attr = self_lock_in_with(item, cls.lock_attrs)
+                    if attr is not None:
+                        acquired[attr] = stmt.lineno
+                    visit_expr(item.context_expr, held)
+                    if item.optional_vars is not None:
+                        visit_expr(item.optional_vars, held)
+                if acquired and on_acquire:
+                    on_acquire(stmt, list(acquired), dict(held))
+                inner = dict(held)
+                inner.update(acquired)
+                visit_stmts(stmt.body, inner)
+            elif isinstance(stmt, (ast.If, ast.While)):
+                visit_expr(stmt.test, held)
+                visit_stmts(stmt.body, held)
+                visit_stmts(stmt.orelse, held)
+            elif isinstance(stmt, ast.For):
+                visit_expr(stmt.target, held)
+                visit_expr(stmt.iter, held)
+                visit_stmts(stmt.body, held)
+                visit_stmts(stmt.orelse, held)
+            elif isinstance(stmt, ast.Try):
+                visit_stmts(stmt.body, held)
+                for h in stmt.handlers:
+                    if h.type is not None:
+                        visit_expr(h.type, held)
+                    visit_stmts(h.body, held)
+                visit_stmts(stmt.orelse, held)
+                visit_stmts(stmt.finalbody, held)
+            elif isinstance(stmt, ast.ClassDef):
+                continue
+            else:
+                visit_expr(stmt, held)
+
+    visit_stmts(func.body, initial)
+
+
+def iter_functions(ctx: FileContext):
+    """Yield (cls_or_None, func, qualname) for every function in the file.
+
+    Nested defs are yielded with their enclosing class (so self-lock
+    metadata applies) but walked with an empty held set by walk_held.
+    """
+
+    def nested(func, cls, prefix):
+        for sub in ast.walk(func):
+            if sub is not func and isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield cls, sub, f"{prefix}.{sub.name}"
+
+    seen = set()
+    for cls in ctx.classes:
+        for meth in cls.methods():
+            qual = f"{cls.name}.{meth.name}"
+            seen.add(id(meth))
+            yield cls, meth, qual
+            for c, f, q in nested(meth, cls, qual):
+                seen.add(id(f))
+                yield c, f, q
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and id(node) not in seen:
+            yield None, node, node.name

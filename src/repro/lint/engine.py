@@ -1,0 +1,78 @@
+"""Drive the rule set over a file tree and apply the baseline."""
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.lint.context import FileContext
+from repro.lint.findings import Finding
+from repro.lint.rules import ALL_RULES, RULE_IDS
+
+SKIP_DIRS = {"__pycache__", ".git", "lint_fixtures"}
+
+
+def collect_files(paths: list[str | Path]) -> list[Path]:
+    files: list[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(
+                f
+                for f in sorted(p.rglob("*.py"))
+                if not (set(f.parts) & SKIP_DIRS)
+            )
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def lint_paths(
+    paths: list[str | Path],
+    rules: set[str] | None = None,
+) -> list[Finding]:
+    """Lint the given files/dirs; ``rules`` filters by rule id (e.g.
+    ``{"guarded-by", "lock-order"}``); None means all rules."""
+    families = None
+    if rules is not None:
+        families = {RULE_IDS[r] for r in rules if r in RULE_IDS}
+
+    contexts: list[FileContext] = []
+    findings: list[Finding] = []
+    for path in collect_files(paths):
+        try:
+            ctx = FileContext(path)
+        except SyntaxError as exc:
+            findings.append(
+                Finding(
+                    rule="parse-error",
+                    path=str(path),
+                    line=exc.lineno or 0,
+                    col=exc.offset or 0,
+                    message=f"could not parse: {exc.msg}",
+                )
+            )
+            continue
+        contexts.append(ctx)
+
+    for name, mod in ALL_RULES.items():
+        if families is not None and name not in families:
+            continue
+        if hasattr(mod, "check"):
+            for ctx in contexts:
+                findings.extend(mod.check(ctx))
+        if hasattr(mod, "check_project"):
+            findings.extend(mod.check_project(contexts))
+
+    if rules is not None:
+        findings = [f for f in findings if f.rule in rules or f.rule == "parse-error"]
+
+    # nested defs are visited both standalone and through their enclosing
+    # method — drop exact duplicates
+    seen: set[tuple] = set()
+    unique: list[Finding] = []
+    for f in sorted(findings, key=lambda f: (f.path, f.line, f.col, f.rule)):
+        key = (f.rule, f.path, f.line, f.col, f.message)
+        if key in seen:
+            continue
+        seen.add(key)
+        unique.append(f)
+    return unique

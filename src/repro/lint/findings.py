@@ -1,0 +1,86 @@
+"""Finding records, stable fingerprints, and the baseline workflow.
+
+A finding's fingerprint deliberately excludes line/column so that
+unrelated edits above a grandfathered finding do not invalidate the
+baseline.  It hashes (rule, relative path, enclosing scope, message);
+messages therefore avoid embedding line numbers.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str  # repo-relative (or as-given) posix path
+    line: int
+    col: int
+    message: str
+    scope: str = ""  # "Class.method" / "module" — stabilises fingerprints
+
+    @property
+    def fingerprint(self) -> str:
+        blob = "|".join((self.rule, self.path, self.scope, self.message))
+        return hashlib.blake2b(blob.encode("utf-8"), digest_size=8).hexdigest()
+
+    def render(self) -> str:
+        where = f"{self.path}:{self.line}:{self.col}"
+        scope = f" [{self.scope}]" if self.scope else ""
+        return f"{where}: {self.rule}: {self.message}{scope}"
+
+    def to_json(self) -> dict:
+        return {
+            "rule": self.rule,
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "message": self.message,
+            "scope": self.scope,
+            "fingerprint": self.fingerprint,
+        }
+
+
+@dataclass
+class Baseline:
+    """Committed set of grandfathered finding fingerprints (target: empty)."""
+
+    path: Path | None = None
+    fingerprints: dict[str, dict] = field(default_factory=dict)
+
+    @classmethod
+    def load(cls, path: str | Path) -> "Baseline":
+        p = Path(path)
+        if not p.exists():
+            return cls(path=p)
+        data = json.loads(p.read_text())
+        fps = {e["fingerprint"]: e for e in data.get("findings", [])}
+        return cls(path=p, fingerprints=fps)
+
+    def __contains__(self, finding: Finding) -> bool:
+        return finding.fingerprint in self.fingerprints
+
+    def split(self, findings: list[Finding]) -> tuple[list[Finding], list[Finding], list[dict]]:
+        """Partition into (new, grandfathered) and report stale entries."""
+        new = [f for f in findings if f not in self]
+        old = [f for f in findings if f in self]
+        live = {f.fingerprint for f in findings}
+        stale = [e for fp, e in self.fingerprints.items() if fp not in live]
+        return new, old, stale
+
+    @staticmethod
+    def write(path: str | Path, findings: list[Finding]) -> None:
+        entries = [
+            {
+                "fingerprint": f.fingerprint,
+                "rule": f.rule,
+                "path": f.path,
+                "scope": f.scope,
+                "message": f.message,
+            }
+            for f in sorted(findings, key=lambda f: (f.path, f.rule, f.scope, f.message))
+        ]
+        Path(path).write_text(json.dumps({"version": 1, "findings": entries}, indent=2) + "\n")

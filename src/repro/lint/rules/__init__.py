@@ -1,0 +1,24 @@
+"""Rule registry: each module exposes ``check(ctx) -> list[Finding]``."""
+from repro.lint.rules import dispatch, guarded, hygiene, lifecycle, lockorder
+
+ALL_RULES = {
+    "guarded": guarded,
+    "lockorder": lockorder,
+    "lifecycle": lifecycle,
+    "dispatch": dispatch,
+    "hygiene": hygiene,
+}
+
+# rule-id -> family, for --rules filtering and docs
+RULE_IDS = {
+    "guarded-by": "guarded",
+    "lock-order": "lockorder",
+    "thread-join": "lifecycle",
+    "socket-close": "lifecycle",
+    "dispatch-return": "dispatch",
+    "error-code": "dispatch",
+    "bare-except": "hygiene",
+    "mutable-default": "hygiene",
+    "sleep-under-lock": "hygiene",
+    "io-under-lock": "hygiene",
+}

@@ -1,0 +1,161 @@
+"""dispatch-return / error-code: wire-dispatch completeness.
+
+dispatch-return — in server classes, every dispatch handler
+(``_handle``, ``_handle_frame``, ``_op_*``) must produce a reply on
+every control-flow path: each path ends in ``return <expr>`` or
+``raise``; a fall-off-the-end path or a bare ``return`` replies None
+and hangs/kills the peer's request.
+
+error-code — wire error replies (dict literals with ``"ok": False`` and
+an ``"error"`` key) must carry a machine-readable ``"code"`` tag so
+clients can map them to typed exceptions (gateway/tenancy.py
+``error_from_reply``).  Applies to every dict literal in the tree.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.lint.context import FileContext
+from repro.lint.findings import Finding
+
+RETURN_RULE = "dispatch-return"
+CODE_RULE = "error-code"
+HANDLER_RE = re.compile(r"^(_handle(_\w+)?|_op_\w+)$")
+
+
+def check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for cls in ctx.classes:
+        if not cls.name.endswith(("Server", "Engine")):
+            continue
+        for meth in cls.methods():
+            if not HANDLER_RE.match(meth.name):
+                continue
+            qual = f"{cls.name}.{meth.name}"
+            if not _terminates(meth.body):
+                if not ctx.suppressed(meth.lineno, RETURN_RULE):
+                    findings.append(
+                        Finding(
+                            rule=RETURN_RULE,
+                            path=str(ctx.path),
+                            line=meth.lineno,
+                            col=meth.col_offset,
+                            message=(
+                                f"dispatch handler {meth.name} can fall off the end "
+                                f"without returning a reply"
+                            ),
+                            scope=qual,
+                        )
+                    )
+                continue
+            for node in _walk_own(meth):
+                if isinstance(node, ast.Return) and node.value is None:
+                    if ctx.suppressed(node.lineno, RETURN_RULE):
+                        continue
+                    findings.append(
+                        Finding(
+                            rule=RETURN_RULE,
+                            path=str(ctx.path),
+                            line=node.lineno,
+                            col=node.col_offset,
+                            message=(
+                                f"dispatch handler {meth.name} returns without a "
+                                f"reply (bare return replies None)"
+                            ),
+                            scope=qual,
+                        )
+                    )
+    findings.extend(_check_error_codes(ctx))
+    return findings
+
+
+def _walk_own(func):
+    """Walk func's body without descending into nested defs/lambdas."""
+    stack = list(func.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        yield node
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _terminates(stmts: list[ast.stmt]) -> bool:
+    """True if every path through stmts ends in return/raise."""
+    for stmt in stmts:
+        if isinstance(stmt, (ast.Return, ast.Raise)):
+            return True
+        if isinstance(stmt, ast.If):
+            if stmt.orelse and _terminates(stmt.body) and _terminates(stmt.orelse):
+                return True
+        elif isinstance(stmt, ast.Try):
+            if stmt.finalbody and _terminates(stmt.finalbody):
+                return True
+            body_t = _terminates(stmt.orelse) if stmt.orelse else _terminates(stmt.body)
+            if body_t and all(_terminates(h.body) for h in stmt.handlers):
+                return True
+        elif isinstance(stmt, ast.With):
+            if _terminates(stmt.body):
+                return True
+        elif isinstance(stmt, ast.While):
+            if (
+                isinstance(stmt.test, ast.Constant)
+                and stmt.test.value
+                and not _has_break(stmt)
+            ):
+                return True
+        elif isinstance(stmt, ast.Match):
+            has_catchall = any(
+                isinstance(c.pattern, ast.MatchAs) and c.pattern.pattern is None
+                for c in stmt.cases
+            )
+            if has_catchall and all(_terminates(c.body) for c in stmt.cases):
+                return True
+    return False
+
+
+def _has_break(loop) -> bool:
+    stack = list(loop.body)
+    while stack:
+        node = stack.pop()
+        if isinstance(node, ast.Break):
+            return True
+        if isinstance(node, (ast.For, ast.While, ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue  # break inside belongs to the inner loop
+        stack.extend(ast.iter_child_nodes(node))
+    return False
+
+
+def _check_error_codes(ctx: FileContext) -> list[Finding]:
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Dict):
+            continue
+        keys = {
+            k.value: v
+            for k, v in zip(node.keys, node.values)
+            if isinstance(k, ast.Constant) and isinstance(k.value, str)
+        }
+        ok = keys.get("ok")
+        is_error_reply = (
+            isinstance(ok, ast.Constant) and ok.value is False and "error" in keys
+        )
+        if not is_error_reply or "code" in keys:
+            continue
+        if ctx.suppressed(node.lineno, CODE_RULE):
+            continue
+        findings.append(
+            Finding(
+                rule=CODE_RULE,
+                path=str(ctx.path),
+                line=node.lineno,
+                col=node.col_offset,
+                message=(
+                    'wire error reply ({"ok": False, "error": ...}) is missing a '
+                    'machine-readable "code" tag'
+                ),
+                scope="",
+            )
+        )
+    return findings

@@ -1,0 +1,59 @@
+"""guarded-by: flag guarded-attribute access outside the owning lock.
+
+A class opts in by declaring a guard map (``_GUARDED_BY`` or trailing
+``# guarded by:`` comments).  Every ``self.<attr>`` access in its
+methods is then checked against the set of locks held at that point.
+``__init__`` is exempt (no concurrent readers exist before the
+constructor returns); methods may declare ``# holds: self._lock`` when
+every caller acquires the lock for them.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint.context import FileContext, iter_functions, walk_held
+from repro.lint.findings import Finding
+
+RULE = "guarded-by"
+EXEMPT_METHODS = {"__init__", "__del__", "__repr__"}
+
+
+def check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for cls, func, qual in iter_functions(ctx):
+        if cls is None or not cls.guard_map:
+            continue
+        if func.name in EXEMPT_METHODS and "." not in qual.removeprefix(f"{cls.name}."):
+            continue
+        seen: set[tuple[int, int, str]] = set()
+
+        def on_node(node, held, _f=findings, _s=seen, _cls=cls, _q=qual):
+            if not (
+                isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"
+            ):
+                return
+            lock = _cls.guard_map.get(node.attr)
+            if lock is None or lock in held:
+                return
+            key = (node.lineno, node.col_offset, node.attr)
+            if key in seen or ctx.suppressed(node.lineno, RULE):
+                return
+            _s.add(key)
+            _f.append(
+                Finding(
+                    rule=RULE,
+                    path=str(ctx.path),
+                    line=node.lineno,
+                    col=node.col_offset,
+                    message=(
+                        f"self.{node.attr} is guarded by self.{lock} "
+                        f"but accessed without holding it"
+                    ),
+                    scope=_q,
+                )
+            )
+
+        walk_held(func, cls, on_node=on_node)
+    return findings

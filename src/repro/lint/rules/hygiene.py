@@ -1,0 +1,163 @@
+"""Hygiene bans: bare-except, mutable-default, sleep/blocking-io under lock.
+
+* ``bare-except`` — ``except:`` swallows KeyboardInterrupt/SystemExit;
+  name the exception (and log it).
+* ``mutable-default`` — list/dict/set literals (or calls) as parameter
+  defaults are shared across calls.
+* ``sleep-under-lock`` — ``time.sleep`` while holding a tracked self
+  lock stalls every other thread contending for it.
+* ``io-under-lock`` — blocking socket I/O (or a ``wire.*`` round-trip)
+  while holding a tracked self lock turns a slow peer into a stalled
+  server.  Deliberate I/O-serialisation locks (e.g. one-request-at-a-time
+  client connections) suppress with ``# lint: ignore[io-under-lock]`` on
+  the ``with`` line, which covers the whole block.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.lint.context import FileContext, iter_functions, walk_held
+from repro.lint.findings import Finding
+
+BARE_RULE = "bare-except"
+DEFAULT_RULE = "mutable-default"
+SLEEP_RULE = "sleep-under-lock"
+IO_RULE = "io-under-lock"
+
+SOCKET_BLOCKING = {
+    "recv",
+    "recv_into",
+    "recvmsg",
+    "recvfrom",
+    "sendall",
+    "sendmsg",
+    "accept",
+    "connect",
+    "sendfile",
+}
+WIRE_BLOCKING = {
+    "request",
+    "send_frame",
+    "recv_frame",
+    "send_msg",
+    "recv_msg",
+    "read_exact",
+}
+
+
+def check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+    findings.extend(_bare_excepts(ctx))
+    findings.extend(_mutable_defaults(ctx))
+    findings.extend(_under_lock(ctx))
+    return findings
+
+
+def _bare_excepts(ctx: FileContext) -> list[Finding]:
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ExceptHandler) and node.type is None:
+            if ctx.suppressed(node.lineno, BARE_RULE):
+                continue
+            findings.append(
+                Finding(
+                    rule=BARE_RULE,
+                    path=str(ctx.path),
+                    line=node.lineno,
+                    col=node.col_offset,
+                    message=(
+                        "bare `except:` swallows KeyboardInterrupt/SystemExit — "
+                        "catch a named exception and log it"
+                    ),
+                )
+            )
+    return findings
+
+
+def _is_mutable_literal(node: ast.expr) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id in ("list", "dict", "set", "bytearray")
+        and not node.args
+        and not node.keywords
+    )
+
+
+def _mutable_defaults(ctx: FileContext) -> list[Finding]:
+    findings = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for default in list(node.args.defaults) + [
+            d for d in node.args.kw_defaults if d is not None
+        ]:
+            if _is_mutable_literal(default) and not ctx.suppressed(
+                default.lineno, DEFAULT_RULE
+            ):
+                findings.append(
+                    Finding(
+                        rule=DEFAULT_RULE,
+                        path=str(ctx.path),
+                        line=default.lineno,
+                        col=default.col_offset,
+                        message=(
+                            f"mutable default argument in {node.name}() is shared "
+                            f"across calls — default to None and allocate inside"
+                        ),
+                        scope=node.name,
+                    )
+                )
+    return findings
+
+
+def _under_lock(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for cls, func, qual in iter_functions(ctx):
+        if cls is None or not cls.lock_attrs:
+            continue
+
+        def on_node(node, held, _q=qual):
+            if not held or not isinstance(node, ast.Call):
+                return
+            f = node.func
+            if not isinstance(f, ast.Attribute):
+                return
+            rule = None
+            if f.attr == "sleep" and isinstance(f.value, ast.Name) and f.value.id == "time":
+                rule = SLEEP_RULE
+                what = "time.sleep()"
+            elif f.attr in SOCKET_BLOCKING:
+                rule = IO_RULE
+                what = f"blocking socket call .{f.attr}()"
+            elif (
+                f.attr in WIRE_BLOCKING
+                and isinstance(f.value, ast.Name)
+                and f.value.id == "wire"
+            ):
+                rule = IO_RULE
+                what = f"blocking wire.{f.attr}() round-trip"
+            if rule is None:
+                return
+            # suppression on the call line, or on any held lock's with line
+            if ctx.suppressed(node.lineno, rule):
+                return
+            for ln in held.values():
+                if ctx.suppressed(ln, rule):
+                    return
+            locks = ", ".join(f"self.{a}" for a in sorted(held))
+            findings.append(
+                Finding(
+                    rule=rule,
+                    path=str(ctx.path),
+                    line=node.lineno,
+                    col=node.col_offset,
+                    message=f"{what} while holding {locks}",
+                    scope=_q,
+                )
+            )
+
+        walk_held(func, cls, on_node=on_node)
+    return findings

@@ -1,0 +1,321 @@
+"""thread-join / socket-close: lifecycle rules.
+
+thread-join — every ``threading.Thread`` a class creates must be
+reachable from a stop-like method's ``join()`` (``stop``/``close``/
+``shutdown``/``join``/``__exit__``, including one level of self-method
+calls from those).  Recognised creation shapes:
+
+* ``self._t = threading.Thread(...)``              (attr)
+* ``t = threading.Thread(...); self._ts.append(t)`` (registered local)
+* ``self._ts = [threading.Thread(...) for ...]``    (list comprehension)
+* ``threading.Thread(...).start()``                 (always a finding)
+
+Join detection follows one level of local aliasing
+(``ts = list(self._ts)`` then ``for t in ts: t.join()``).
+
+socket-close — a socket created locally (``socket.socket``,
+``socket.create_connection``, ``sock.accept()``) that never escapes the
+function (no call argument, return, yield, or store) must be closed via
+``with`` or a ``finally``/unconditional ``close()``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+
+from repro.lint.context import FileContext, iter_functions
+from repro.lint.findings import Finding
+
+THREAD_RULE = "thread-join"
+SOCKET_RULE = "socket-close"
+STOP_RE = re.compile(r"^(stop|close|shutdown|join|__exit__|__del__)$|^(stop|close|shutdown)_")
+
+
+def check(ctx: FileContext) -> list[Finding]:
+    findings: list[Finding] = []
+    for cls in ctx.classes:
+        findings.extend(_check_threads(ctx, cls))
+    for cls, func, qual in iter_functions(ctx):
+        findings.extend(_check_sockets(ctx, func, qual))
+    return findings
+
+
+# -- thread-join ----------------------------------------------------------
+
+def _is_thread_call(node: ast.expr) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr == "Thread"
+        and isinstance(node.func.value, ast.Name)
+        and node.func.value.id == "threading"
+    )
+
+
+def _check_threads(ctx: FileContext, cls) -> list[Finding]:
+    findings: list[Finding] = []
+    # attr -> creation site (line, col, qual); detached -> list of sites
+    tracked: dict[str, tuple[int, int, str]] = {}
+    detached: list[tuple[int, int, str, str]] = []
+
+    for meth in cls.methods():
+        qual = f"{cls.name}.{meth.name}"
+        # local thread var -> created-here flag
+        local_threads: dict[str, ast.Assign] = {}
+        registered: set[str] = set()
+        for node in ast.walk(meth):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt, val = node.targets[0], node.value
+                if _is_thread_call(val):
+                    if isinstance(tgt, ast.Attribute) and isinstance(tgt.value, ast.Name) and tgt.value.id == "self":
+                        tracked.setdefault(tgt.attr, (node.lineno, node.col_offset, qual))
+                    elif isinstance(tgt, ast.Name):
+                        local_threads[tgt.id] = node
+                elif isinstance(val, ast.ListComp) and _is_thread_call(val.elt):
+                    if isinstance(tgt, ast.Attribute) and isinstance(tgt.value, ast.Name) and tgt.value.id == "self":
+                        tracked.setdefault(tgt.attr, (node.lineno, node.col_offset, qual))
+            elif isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute):
+                f = node.func
+                # self._ts.append(t) / self._ts[k] = handled below; dict: self._ts[key] = t
+                if (
+                    f.attr in ("append", "add")
+                    and isinstance(f.value, ast.Attribute)
+                    and isinstance(f.value.value, ast.Name)
+                    and f.value.value.id == "self"
+                    and len(node.args) == 1
+                    and isinstance(node.args[0], ast.Name)
+                ):
+                    if node.args[0].id in local_threads:
+                        tracked.setdefault(
+                            f.value.attr,
+                            (node.lineno, node.col_offset, qual),
+                        )
+                        registered.add(node.args[0].id)
+                # threading.Thread(...).start() — never joinable
+                if f.attr == "start" and _is_thread_call(f.value):
+                    detached.append((node.lineno, node.col_offset, qual, "<anonymous>"))
+            elif isinstance(node, ast.Assign) and len(node.targets) == 1:
+                pass
+        # dict registration: self._ts[key] = t
+        for node in ast.walk(meth):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt, val = node.targets[0], node.value
+                if (
+                    isinstance(tgt, ast.Subscript)
+                    and isinstance(tgt.value, ast.Attribute)
+                    and isinstance(tgt.value.value, ast.Name)
+                    and tgt.value.value.id == "self"
+                    and isinstance(val, ast.Name)
+                    and val.id in local_threads
+                ):
+                    tracked.setdefault(tgt.value.attr, (node.lineno, node.col_offset, qual))
+                    registered.add(val.id)
+        for name, node in local_threads.items():
+            if name not in registered:
+                detached.append((node.lineno, node.col_offset, qual, name))
+
+    if not tracked and not detached:
+        return findings
+
+    joined = _joined_attrs(cls)
+    for ln, col, qual, name in detached:
+        if ctx.suppressed(ln, THREAD_RULE):
+            continue
+        findings.append(
+            Finding(
+                rule=THREAD_RULE,
+                path=str(ctx.path),
+                line=ln,
+                col=col,
+                message=(
+                    f"thread {name!r} is started but never stored or registered "
+                    f"for join by a stop()/close() method"
+                ),
+                scope=qual,
+            )
+        )
+    for attr, (ln, col, qual) in sorted(tracked.items()):
+        if attr in joined or ctx.suppressed(ln, THREAD_RULE):
+            continue
+        findings.append(
+            Finding(
+                rule=THREAD_RULE,
+                path=str(ctx.path),
+                line=ln,
+                col=col,
+                message=(
+                    f"thread(s) tracked in self.{attr} are never joined by a "
+                    f"stop()/close()/shutdown() method of {cls.name}"
+                ),
+                scope=qual,
+            )
+        )
+    return findings
+
+
+def _joined_attrs(cls) -> set[str]:
+    """Self attrs whose threads are join()ed from stop-like methods."""
+    methods = {m.name: m for m in cls.methods()}
+    stoppish = [m for n, m in methods.items() if STOP_RE.match(n)]
+    # one level of expansion: self.helper() called from a stop-like method
+    expanded = list(stoppish)
+    for m in stoppish:
+        for node in ast.walk(m):
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "self"
+                and node.func.attr in methods
+            ):
+                expanded.append(methods[node.func.attr])
+    joined: set[str] = set()
+    for m in expanded:
+        joined |= _joins_in(m)
+    return joined
+
+
+def _attrs_in(node: ast.AST, aliases: dict[str, set[str]]) -> set[str]:
+    out: set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and isinstance(sub.value, ast.Name) and sub.value.id == "self":
+            out.add(sub.attr)
+        elif isinstance(sub, ast.Name) and sub.id in aliases:
+            out |= aliases[sub.id]
+    return out
+
+
+def _joins_in(meth) -> set[str]:
+    joined: set[str] = set()
+    aliases: dict[str, set[str]] = {}
+
+    def scan(stmts) -> None:
+        for stmt in stmts:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and isinstance(stmt.targets[0], ast.Name):
+                attrs = _attrs_in(stmt.value, aliases)
+                if attrs:
+                    aliases[stmt.targets[0].id] = attrs
+            if isinstance(stmt, ast.For):
+                attrs = _attrs_in(stmt.iter, aliases)
+                if attrs and isinstance(stmt.target, ast.Name):
+                    aliases[stmt.target.id] = attrs
+            for node in ast.walk(stmt):
+                if (
+                    isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "join"
+                ):
+                    joined.update(_attrs_in(node.func.value, aliases))
+            for body in _bodies(stmt):
+                scan(body)
+
+    scan(meth.body)
+    return joined
+
+
+def _bodies(stmt):
+    for field in ("body", "orelse", "finalbody"):
+        b = getattr(stmt, field, None)
+        if b and isinstance(b, list) and b and isinstance(b[0], ast.stmt):
+            yield b
+    for h in getattr(stmt, "handlers", []) or []:
+        yield h.body
+
+
+# -- socket-close ---------------------------------------------------------
+
+def _is_socket_create(val: ast.expr) -> bool:
+    if not isinstance(val, ast.Call):
+        return False
+    f = val.func
+    if (
+        isinstance(f, ast.Attribute)
+        and isinstance(f.value, ast.Name)
+        and f.value.id == "socket"
+        and f.attr in ("socket", "create_connection")
+    ):
+        return True
+    return False
+
+
+def _check_sockets(ctx: FileContext, func, qual: str) -> list[Finding]:
+    created: dict[str, ast.Assign] = {}
+    for node in ast.walk(func):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node is not func:
+            continue
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt, val = node.targets[0], node.value
+            if isinstance(tgt, ast.Name) and _is_socket_create(val):
+                created[tgt.id] = node
+            elif (
+                isinstance(tgt, ast.Tuple)
+                and tgt.elts
+                and isinstance(tgt.elts[0], ast.Name)
+                and isinstance(val, ast.Call)
+                and isinstance(val.func, ast.Attribute)
+                and val.func.attr == "accept"
+            ):
+                created[tgt.elts[0].id] = node
+
+    if not created:
+        return []
+
+    escaped: set[str] = set()
+    closed: set[str] = set()
+    for node in ast.walk(func):
+        if isinstance(node, ast.Call):
+            for arg in list(node.args) + [k.value for k in node.keywords]:
+                for sub in ast.walk(arg):
+                    if isinstance(sub, ast.Name) and sub.id in created:
+                        escaped.add(sub.id)
+        elif isinstance(node, (ast.Return, ast.Yield, ast.YieldFrom)) and node.value is not None:
+            for sub in ast.walk(node.value):
+                if isinstance(sub, ast.Name) and sub.id in created:
+                    escaped.add(sub.id)
+        elif isinstance(node, ast.Assign):
+            tgt = node.targets[0]
+            if not isinstance(tgt, ast.Name):
+                for sub in ast.walk(node.value):
+                    if isinstance(sub, ast.Name) and sub.id in created:
+                        escaped.add(sub.id)
+        elif isinstance(node, ast.With):
+            for item in node.items:
+                for sub in ast.walk(item.context_expr):
+                    if isinstance(sub, ast.Name) and sub.id in created:
+                        closed.add(sub.id)
+    # close()/shutdown() inside a finally block, or anywhere at all if the
+    # function has no branching after creation — keep it simple: any
+    # unconditional-looking close counts, a finally close always counts.
+    for node in ast.walk(func):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "close"
+            and isinstance(node.func.value, ast.Name)
+            and node.func.value.id in created
+        ):
+            closed.add(node.func.value.id)
+
+    findings = []
+    for name, node in created.items():
+        if name in escaped or name in closed:
+            continue
+        if ctx.suppressed(node.lineno, SOCKET_RULE):
+            continue
+        findings.append(
+            Finding(
+                rule=SOCKET_RULE,
+                path=str(ctx.path),
+                line=node.lineno,
+                col=node.col_offset,
+                message=(
+                    f"socket {name!r} is created here but never closed on all "
+                    f"paths (use `with` or close() in a finally block) and never "
+                    f"handed off"
+                ),
+                scope=qual,
+            )
+        )
+    return findings

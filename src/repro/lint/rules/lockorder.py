@@ -1,0 +1,176 @@
+"""lock-order: build the global lock-acquisition graph, fail on cycles.
+
+Lock identity is ``ClassName._attr`` — the usual conservative
+abstraction (all instances of a class share one node).  Edges come from
+two sources:
+
+* syntactic nesting: ``with self._a:`` ... ``with self._b:`` adds a->b;
+* one level of call expansion: ``self.helper()`` while holding ``_a``
+  adds a->x for every lock x that ``helper`` itself acquires with a
+  ``with`` (minus its ``# holds:`` annotation) — this is what catches
+  ``_inflight_lock -> _cond`` via ``_release_credit`` in the channels.
+
+Re-acquiring a held non-reentrant lock (directly or through a callee)
+is reported as a self-edge cycle.  RLock/Condition self-edges are fine.
+"""
+from __future__ import annotations
+
+import ast
+from collections import defaultdict
+
+from repro.lint.context import FileContext, iter_functions, walk_held
+from repro.lint.findings import Finding
+
+RULE = "lock-order"
+
+
+def _direct_acquires(ctx: FileContext) -> dict[tuple[str, str], set[str]]:
+    """(class, method) -> lock attrs the method acquires via with itself."""
+    out: dict[tuple[str, str], set[str]] = defaultdict(set)
+    for cls, func, qual in iter_functions(ctx):
+        if cls is None:
+            continue
+        pre = cls.holds.get(func.name, frozenset())
+
+        def on_acquire(node, acquired, held, _k=(cls.name, func.name), _pre=pre):
+            out[_k].update(a for a in acquired if a not in _pre)
+
+        walk_held(func, cls, on_acquire=on_acquire)
+    return out
+
+
+def check_project(ctxs: list[FileContext]) -> list[Finding]:
+    # edge (from_node, to_node) -> example site (path, line, qual)
+    edges: dict[tuple[str, str], tuple[str, int, str]] = {}
+    acquires: dict[tuple[str, str], set[str]] = {}
+    for ctx in ctxs:
+        acquires.update(_direct_acquires(ctx))
+
+    def add_edge(a: str, b: str, site) -> None:
+        edges.setdefault((a, b), site)
+
+    for ctx in ctxs:
+        for cls, func, qual in iter_functions(ctx):
+            if cls is None:
+                continue
+
+            def on_acquire(node, acquired, held, _cls=cls, _q=qual, _ctx=ctx):
+                if _ctx.suppressed(node.lineno, RULE):
+                    return
+                site = (str(_ctx.path), node.lineno, _q)
+                for a in acquired:
+                    na = f"{_cls.name}.{a}"
+                    if a in held:
+                        if a not in _cls.reentrant:
+                            add_edge(na, na, site)
+                        continue
+                    for h in held:
+                        if h != a:
+                            add_edge(f"{_cls.name}.{h}", na, site)
+
+            def on_node(node, held, _cls=cls, _q=qual, _ctx=ctx):
+                # one-level expansion of self.method() calls under a lock
+                if not held or not isinstance(node, ast.Call):
+                    return
+                f = node.func
+                if not (
+                    isinstance(f, ast.Attribute)
+                    and isinstance(f.value, ast.Name)
+                    and f.value.id == "self"
+                ):
+                    return
+                callee = acquires.get((_cls.name, f.attr))
+                if not callee or _ctx.suppressed(node.lineno, RULE):
+                    return
+                site = (str(_ctx.path), node.lineno, _q)
+                for a in callee:
+                    na = f"{_cls.name}.{a}"
+                    if a in held:
+                        if a not in _cls.reentrant:
+                            add_edge(na, na, site)
+                        continue
+                    for h in held:
+                        if h != a:
+                            add_edge(f"{_cls.name}.{h}", na, site)
+
+            walk_held(func, cls, on_node=on_node, on_acquire=on_acquire)
+
+    return _cycles_to_findings(edges)
+
+
+def _cycles_to_findings(edges) -> list[Finding]:
+    graph: dict[str, set[str]] = defaultdict(set)
+    for a, b in edges:
+        graph[a].add(b)
+    findings: list[Finding] = []
+    for comp in _sccs(graph):
+        cyclic = len(comp) > 1 or (len(comp) == 1 and comp[0] in graph[comp[0]])
+        if not cyclic:
+            continue
+        nodes = sorted(comp)
+        sites = sorted(
+            site for (a, b), site in edges.items() if a in comp and b in comp
+        )
+        path, line, qual = sites[0]
+        detail = "; ".join(f"{a}->{b} at {s[0]}:{s[1]}" for (a, b), s in sorted(edges.items()) if a in comp and b in comp)
+        findings.append(
+            Finding(
+                rule=RULE,
+                path=path,
+                line=line,
+                col=0,
+                message=f"lock-order cycle among {{{', '.join(nodes)}}}: {detail}",
+                scope=qual,
+            )
+        )
+    return findings
+
+
+def _sccs(graph: dict[str, set[str]]) -> list[list[str]]:
+    """Tarjan strongly-connected components (iterative)."""
+    index: dict[str, int] = {}
+    low: dict[str, int] = {}
+    on_stack: set[str] = set()
+    stack: list[str] = []
+    out: list[list[str]] = []
+    counter = [0]
+    nodes = set(graph) | {b for bs in graph.values() for b in bs}
+
+    for root in sorted(nodes):
+        if root in index:
+            continue
+        work = [(root, iter(sorted(graph.get(root, ()))))]
+        index[root] = low[root] = counter[0]
+        counter[0] += 1
+        stack.append(root)
+        on_stack.add(root)
+        while work:
+            v, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on_stack.add(w)
+                    work.append((w, iter(sorted(graph.get(w, ())))))
+                    advanced = True
+                    break
+                if w in on_stack:
+                    low[v] = min(low[v], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                pv = work[-1][0]
+                low[pv] = min(low[pv], low[v])
+            if low[v] == index[v]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on_stack.discard(w)
+                    comp.append(w)
+                    if w == v:
+                        break
+                out.append(comp)
+    return out

@@ -1,0 +1,222 @@
+"""Runtime lock-order sanitizer (``REPRO_LOCKCHECK=1``).
+
+Wraps the ``threading.Lock``/``threading.RLock`` factories so every lock
+created by *our* code (creation site inside a ``repro`` package or the
+test tree) is tagged with a stable name (``file:line`` of the creating
+statement).  Each thread keeps a stack of held checked locks; every
+acquisition records held->acquired edges into a process-wide order
+graph, and an acquisition whose reverse edge already exists is flagged
+as an inversion — the dynamic complement of the static ``lock-order``
+rule (which only sees ``with self._x`` nesting, not cross-object or
+data-dependent orders).
+
+Usage::
+
+    from repro.lint import runtime
+    runtime.install()            # no-op unless REPRO_LOCKCHECK=1 (or force=True)
+    ...
+    assert not runtime.inversions()
+
+``tests/conftest.py`` installs it when ``REPRO_LOCKCHECK=1`` and fails
+the session if any inversion was recorded.  Overhead is a few dict
+operations per acquire/release — keep it out of perf runs.
+
+Scope and honesty notes:
+
+* Only locks created *after* ``install()`` from repro/tests code are
+  checked; stdlib internals (queue.Queue, logging) keep raw locks.
+* Lock identity is the creation site, mirroring the static rule's
+  ``Class._attr`` abstraction — all instances created on one line share
+  a node, so a reported inversion is a *potential* deadlock.
+* ``threading.Condition`` composes correctly: ``Condition()`` (no arg)
+  wraps a checked RLock via the patched factory; ``Condition(lock)``
+  binds our ``acquire``/``release`` and — only when the inner lock
+  provides them — the ``_release_save``/``_acquire_restore``/
+  ``_is_owned`` trio, so ``wait()`` keeps the held-stack honest.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+from dataclasses import dataclass, field
+
+_raw_lock = threading.Lock
+_raw_rlock = threading.RLock
+
+_state_lock = _raw_lock()
+_installed = False
+_edges: dict[tuple[str, str], str] = {}  # (held, acquired) -> example
+_reported: set[frozenset] = set()  # unordered pairs already reported
+_inversions: list[dict] = []
+_tls = threading.local()
+
+
+@dataclass
+class _Report:
+    edges: dict = field(default_factory=dict)
+    inversions: list = field(default_factory=list)
+
+
+def _held() -> list:
+    stack = getattr(_tls, "stack", None)
+    if stack is None:
+        stack = _tls.stack = []
+    return stack
+
+
+def _creation_site() -> str | None:
+    """``file:line`` of the first frame outside threading/this module.
+
+    Returns None (lock stays unchecked) when that frame is not our code.
+    """
+    f = sys._getframe(2)  # skip _creation_site and factory
+    while f is not None:
+        fn = f.f_code.co_filename.replace("\\", "/")
+        if fn.endswith("lint/runtime.py") or fn.endswith("/threading.py"):
+            f = f.f_back
+            continue
+        if "/repro/" in fn:
+            return f"{fn.rsplit('/repro/', 1)[-1]}:{f.f_lineno}"
+        if "/tests/" in fn or fn.endswith("conftest.py") or fn.rsplit("/", 1)[-1].startswith("test_"):
+            return f"{fn.rsplit('/', 1)[-1]}:{f.f_lineno}"
+        return None
+    return None
+
+
+class _CheckedLock:
+    """Order-checking proxy over a raw Lock/RLock."""
+
+    def __init__(self, inner, site: str):
+        self._inner = inner
+        self._site = site
+
+    # -- order bookkeeping -------------------------------------------------
+    def _record_acquire(self) -> None:
+        stack = _held()
+        me = self._site
+        if stack and stack[-1] != me:
+            tname = threading.current_thread().name
+            with _state_lock:
+                for h in stack:
+                    if h == me:
+                        continue
+                    pair = frozenset((h, me))
+                    if (me, h) in _edges and pair not in _reported:
+                        _reported.add(pair)
+                        _inversions.append(
+                            {
+                                "first": _edges[(me, h)],
+                                "second": f"{h} -> {me} in thread {tname}",
+                                "pair": tuple(sorted(pair)),
+                            }
+                        )
+                    _edges.setdefault((h, me), f"{h} -> {me} in thread {tname}")
+        stack.append(me)
+
+    def _record_release(self) -> None:
+        stack = _held()
+        # RLock re-entry and Condition.wait release out of LIFO order:
+        # drop the most recent entry for this site.
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] == self._site:
+                del stack[i]
+                break
+
+    # -- lock protocol -----------------------------------------------------
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            self._record_acquire()
+        return got
+
+    def release(self) -> None:
+        self._inner.release()
+        self._record_release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __getattr__(self, name: str):
+        # Conditional protocol surface: expose _release_save /
+        # _acquire_restore / _is_owned / locked only when the inner lock
+        # has them, so threading.Condition's hasattr-style fallbacks keep
+        # working for plain Locks.
+        inner = object.__getattribute__(self, "_inner")
+        attr = getattr(inner, name)  # AttributeError propagates, as required
+        if name == "_release_save":
+            def _release_save():
+                state = attr()
+                self._record_release()
+                return state
+
+            return _release_save
+        if name == "_acquire_restore":
+            def _acquire_restore(state):
+                attr(state)
+                self._record_acquire()
+
+            return _acquire_restore
+        return attr
+
+    def __repr__(self) -> str:
+        return f"<CheckedLock {self._site} over {self._inner!r}>"
+
+
+def _make_factory(raw):
+    def factory(*args, **kwargs):
+        site = _creation_site()
+        inner = raw(*args, **kwargs)
+        if site is None:
+            return inner
+        return _CheckedLock(inner, site)
+
+    return factory
+
+
+def install(force: bool = False) -> bool:
+    """Patch threading.Lock/RLock. Returns True if active.
+
+    No-op unless ``REPRO_LOCKCHECK=1`` or ``force=True``; idempotent.
+    """
+    global _installed
+    if _installed:
+        return True
+    if not force and os.environ.get("REPRO_LOCKCHECK") != "1":
+        return False
+    threading.Lock = _make_factory(_raw_lock)
+    threading.RLock = _make_factory(_raw_rlock)
+    _installed = True
+    return True
+
+
+def uninstall() -> None:
+    global _installed
+    threading.Lock = _raw_lock
+    threading.RLock = _raw_rlock
+    _installed = False
+
+
+def installed() -> bool:
+    return _installed
+
+
+def reset() -> None:
+    with _state_lock:
+        _edges.clear()
+        _reported.clear()
+        _inversions.clear()
+
+
+def inversions() -> list[dict]:
+    with _state_lock:
+        return list(_inversions)
+
+
+def report() -> _Report:
+    with _state_lock:
+        return _Report(edges=dict(_edges), inversions=list(_inversions))

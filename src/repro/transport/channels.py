@@ -94,6 +94,12 @@ class ChannelStats:
 class _Transfer:
     """Completion tracker for one striped dataset."""
 
+    _GUARDED_BY = {
+        "_remaining": "_lock",
+        "_finished": "_lock",
+        "_callbacks": "_lock",
+    }
+
     def __init__(self, name: str, n_stripes: int, nbytes: int,
                  on_done: Optional[Callable[["_Transfer"], None]] = None,
                  writer: Optional[RdmaWriter] = None):
@@ -177,6 +183,17 @@ _MAX_VECTOR = 64        # frames per sendmsg burst (2 iovecs each, < IOV cap)
 
 class _Channel:
     """One connection + sender/receiver thread pair with a credit window."""
+
+    # ``_dead`` is deliberately *not* declared: it is published under both
+    # _inflight_lock and _cond (see _fail) and the sender's top-of-loop
+    # read is a benign racy fast-path — the authoritative check-and-append
+    # happens under _inflight_lock.
+    _GUARDED_BY = {
+        "_unacked": "_cond",
+        "_window": "_cond",
+        "_closing": "_cond",
+        "_inflight": "_inflight_lock",
+    }
 
     def __init__(self, index: int, addr: str, credits: int,
                  connect: Callable, send_frame: Callable,
@@ -344,7 +361,9 @@ class _Channel:
             except (ConnectionError, OSError) as e:
                 # fail any stripes still awaiting acks even on a shutdown
                 # race — a sender parked on credits must not wait forever
-                self._fail(e if not self._closing
+                with self._cond:
+                    closing = self._closing
+                self._fail(e if not closing
                            else ConnectionError("channel closed"))
                 return
             if h.get("op") == "credit":
@@ -427,6 +446,11 @@ class ChannelGroup:
     per stripe) while reusing the striping/credit machinery.
     """
 
+    _GUARDED_BY = {
+        "_rr": "_ctrl_lock",
+        "_outstanding": "_outstanding_cond",
+    }
+
     def __init__(self, addr: str, n_channels: int,
                  stripe_bytes: int = DEFAULT_STRIPE_BYTES,
                  credits: int = DEFAULT_CREDITS,
@@ -450,7 +474,7 @@ class ChannelGroup:
         self.wire_format = wire_format \
             if send_frame is wire.send_frame else wire.WIRE_JSON
         self._channels: list[_Channel] = []
-        self._ctrl = None
+        self._ctrl = None                     # set once in open()
         self._ctrl_lock = threading.Lock()
         self._rr = 0
         self._opened = False
@@ -529,7 +553,9 @@ class ChannelGroup:
         flat = arr.reshape(-1).view(np.uint8)
         nbytes = flat.nbytes
         stripes = self._plan_stripes(nbytes)
-        with self._ctrl_lock:
+        # request/reply on the shared control conn must be serialized; the
+        # blocking round-trip under the lock is the serialization itself
+        with self._ctrl_lock:  # lint: ignore[io-under-lock]
             h, _ = wire.request(
                 self._ctrl,
                 dict({"op": "stripe_open", "name": name, "dtype": dtype,

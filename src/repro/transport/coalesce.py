@@ -55,6 +55,17 @@ class CoalesceItem:
 class Coalescer:
     """Batches sub-threshold datasets into jumbo flushes."""
 
+    # ``stats`` is only touched by the single worker thread; reads from
+    # other threads are monitoring-only, so it stays unguarded.
+    _GUARDED_BY = {
+        "_pending": "_cond",
+        "_pending_bytes": "_cond",
+        "_deadline": "_cond",
+        "_force": "_cond",
+        "_inflight": "_cond",
+        "_stop": "_cond",
+    }
+
     def __init__(self, flush_fn: Callable[[list], None],
                  coalesce_bytes: int,
                  linger_ms: float = DEFAULT_LINGER_MS,
@@ -136,7 +147,7 @@ class Coalescer:
             return len(self._pending)
 
     # -- worker ---------------------------------------------------------
-    def _due(self) -> bool:
+    def _due(self) -> bool:  # holds: self._cond
         if not self._pending:
             return False
         return (self._force

@@ -72,6 +72,12 @@ class _CopyServer:
     """Receives frames with userspace 16K copies + CRC; stores (scp) or
     forwards (ssh tunnel hop)."""
 
+    _GUARDED_BY = {
+        "_asm": "_asm_lock",
+        "_threads": "_threads_lock",
+        "_conns": "_conn_lock",
+    }
+
     def __init__(self, store_dir: Optional[str], fsync: bool,
                  forward_addr: Optional[str] = None,
                  savime_addr: Optional[str] = None,
@@ -91,15 +97,43 @@ class _CopyServer:
         self._srv.listen(64)
         self.addr = f"127.0.0.1:{self._srv.getsockname()[1]}"
         self._stop = threading.Event()
-        threading.Thread(target=self._accept, daemon=True,
-                         name="copysrv-accept").start()
+        # conn threads were fire-and-forget daemons until the lifecycle
+        # lint flagged them: stop() now shuts live conns and joins, so a
+        # transport close leaves no serve thread (or its socket) behind
+        self._threads: list[threading.Thread] = []
+        self._threads_lock = threading.Lock()
+        self._conns: set[socket.socket] = set()
+        self._conn_lock = threading.Lock()
+        self._accept_thread = threading.Thread(
+            target=self._accept, daemon=True, name="copysrv-accept")
+        self._accept_thread.start()
 
-    def stop(self):
+    def stop(self, join_timeout: float = 2.0):
         self._stop.set()
+        try:
+            # shutdown (not just close) wakes a thread blocked in accept()
+            self._srv.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             self._srv.close()
         except OSError:
             pass
+        with self._conn_lock:
+            conns = list(self._conns)
+        for c in conns:
+            try:
+                c.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+        self._accept_thread.join(join_timeout)
+        deadline = time.monotonic() + join_timeout
+        with self._threads_lock:
+            threads = list(self._threads)
+        for t in threads:
+            t.join(max(deadline - time.monotonic(), 0.0))
+        with self._threads_lock:
+            self._threads = [t for t in self._threads if t.is_alive()]
         self._fwd_socks.close_all()
         self._savime_clis.close_all()
 
@@ -109,25 +143,44 @@ class _CopyServer:
                 conn, _ = self._srv.accept()
             except OSError:
                 return
-            threading.Thread(target=self._serve, args=(conn,), daemon=True,
-                             name="copysrv-conn").start()
+            if self._stop.is_set():
+                # raced stop(): serving now would leave a thread (and a
+                # conn) that stop() already walked past
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+                return
+            with self._threads_lock:
+                self._threads = [t for t in self._threads if t.is_alive()]
+                t = threading.Thread(target=self._serve, args=(conn,),
+                                     daemon=True, name="copysrv-conn")
+                t.start()
+                self._threads.append(t)
 
     def _serve(self, conn: socket.socket):
         conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
-        with conn:
-            while True:
-                try:
-                    header, payload = self._recv_copied(conn)
-                except (ConnectionError, OSError):
-                    return
-                try:
-                    reply = self._handle_frame(header, payload)
-                except Exception as e:  # noqa: BLE001
-                    reply = {"ok": False, "error": str(e)}
-                try:
-                    wire.send_frame(conn, reply)
-                except OSError:
-                    return
+        with self._conn_lock:
+            self._conns.add(conn)
+        try:
+            with conn:
+                while True:
+                    try:
+                        header, payload = self._recv_copied(conn)
+                    except (ConnectionError, OSError):
+                        return
+                    try:
+                        reply = self._handle_frame(header, payload)
+                    except Exception as e:  # noqa: BLE001
+                        reply = {"ok": False, "error": str(e),
+                                 "code": "error"}
+                    try:
+                        wire.send_frame(conn, reply)
+                    except OSError:
+                        return
+        finally:
+            with self._conn_lock:
+                self._conns.discard(conn)
 
     def _handle_frame(self, header, payload) -> dict:
         op = header.get("op")

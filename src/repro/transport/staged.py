@@ -70,7 +70,7 @@ class StagedTransport(Transport):
         self._ctrl = wire.connect(addr)
         if gateway and self.cfg.tenant:
             # bind the control conn to the tenant for proxied/DDL ops
-            with self._ctrl_lock:
+            with self._ctrl_lock:  # lint: ignore[io-under-lock]
                 wire.request(self._ctrl, {"op": "hello",
                                           "tenant": self.cfg.tenant})
 
@@ -132,7 +132,9 @@ class StagedTransport(Transport):
                 if k not in ("ok", "nbytes")}
 
     def _ctrl_request(self, header: dict) -> dict:
-        with self._ctrl_lock:
+        # the lock serializes request/reply pairs on the shared control
+        # conn — blocking under it is the point
+        with self._ctrl_lock:  # lint: ignore[io-under-lock]
             h, _ = wire.request(self._ctrl, header)
         if not h.get("ok"):
             from repro.gateway.tenancy import error_from_reply

@@ -1,0 +1,18 @@
+"""Known-bad: handlers with reply-less paths; an untagged error reply."""
+
+
+class EchoServer:
+    def _handle(self, h):
+        op = h.get("op")
+        if op == "ping":
+            return {"ok": True}
+        # BAD: unknown ops fall off the end -> peer gets no reply
+
+    def _op_get(self, h):
+        if not h.get("key"):
+            return                         # BAD: bare return replies None
+        return {"ok": True, "value": 1}
+
+
+def make_error(msg):
+    return {"ok": False, "error": msg}     # BAD: no "code" tag

@@ -1,0 +1,25 @@
+"""Known-bad: guarded attribute touched without its lock."""
+import threading
+
+
+class Counter:
+    _GUARDED_BY = {"_count": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+
+    def bump(self):
+        self._count += 1          # BAD: _lock not held
+
+    def peek(self):
+        return self._count        # BAD: _lock not held
+
+
+class Commented:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._items = []          # guarded by: self._lock
+
+    def drop(self):
+        self._items.clear()       # BAD: _lock not held

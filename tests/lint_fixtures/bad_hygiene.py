@@ -1,0 +1,23 @@
+"""Known-bad: every hygiene ban in one file."""
+import threading
+import time
+
+
+def fetch(sock, seen=[]):                  # BAD: mutable default
+    try:
+        return sock.recv(1)
+    except:                                # BAD: bare except
+        return None
+
+
+class Slow:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def nap(self):
+        with self._lock:
+            time.sleep(0.1)                # BAD: sleep under lock
+
+    def chat(self, sock):
+        with self._lock:
+            sock.sendall(b"hi")            # BAD: blocking io under lock

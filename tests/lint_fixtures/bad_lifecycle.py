@@ -1,0 +1,21 @@
+"""Known-bad: threads nobody joins, a socket nobody closes."""
+import socket
+import threading
+
+
+class Leaky:
+    def __init__(self):
+        self._t = threading.Thread(target=self._run, daemon=True)  # BAD
+        self._t.start()
+
+    def _run(self):
+        pass
+
+    def poke(self):
+        threading.Thread(target=self._run, daemon=True).start()    # BAD
+
+
+def leak(addr):
+    s = socket.create_connection(addr)     # BAD: never closed, never handed off
+    s.sendall(b"x")
+    return True

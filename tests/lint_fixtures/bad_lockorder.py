@@ -1,0 +1,31 @@
+"""Known-bad: inconsistent nesting order + non-reentrant re-acquire."""
+import threading
+
+
+class Inverted:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def forward(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def backward(self):
+        with self._b:
+            with self._a:          # BAD: reverse of forward() -> cycle
+                pass
+
+
+class SelfDeadlock:
+    def __init__(self):
+        self._m = threading.Lock()
+
+    def outer(self):
+        with self._m:
+            self.inner()           # BAD: inner re-acquires non-reentrant _m
+
+    def inner(self):
+        with self._m:
+            pass

@@ -1,0 +1,18 @@
+"""Known-good: every handler path replies or raises; errors carry codes."""
+
+
+class EchoServer:
+    def _handle(self, h):
+        op = h.get("op")
+        if op == "ping":
+            return {"ok": True}
+        raise ValueError(f"unknown op {op!r}")
+
+    def _op_get(self, h):
+        if not h.get("key"):
+            return {"ok": False, "error": "missing key", "code": "bad_request"}
+        return {"ok": True, "value": 1}
+
+
+def make_error(msg):
+    return {"ok": False, "error": msg, "code": "error"}

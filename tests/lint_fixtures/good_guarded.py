@@ -1,0 +1,21 @@
+"""Known-good: every guarded access holds the lock (or declares holds)."""
+import threading
+
+
+class Counter:
+    _GUARDED_BY = {"_count": "_lock"}
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0           # __init__ is exempt: no concurrency yet
+
+    def bump(self):
+        with self._lock:
+            self._count += 1
+
+    def _bump_locked(self):  # holds: self._lock
+        self._count += 1
+
+    def value(self):
+        with self._lock:
+            return self._count

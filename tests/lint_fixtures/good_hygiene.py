@@ -1,0 +1,27 @@
+"""Known-good: the clean versions, plus one deliberate suppression."""
+import threading
+import time
+
+
+def fetch(sock, seen=None):
+    if seen is None:
+        seen = []
+    try:
+        return sock.recv(1)
+    except OSError:
+        return None
+
+
+class Calm:
+    def __init__(self):
+        self._lock = threading.Lock()
+
+    def nap(self):
+        time.sleep(0.001)                  # fine: no lock held
+        with self._lock:
+            pass
+
+    def chat(self, sock):
+        # deliberate request/reply serialization on this connection
+        with self._lock:  # lint: ignore[io-under-lock]
+            sock.sendall(b"hi")

@@ -1,0 +1,35 @@
+"""Known-good: every thread joined from stop(), sockets closed/handed off."""
+import socket
+import threading
+
+
+class Tidy:
+    def __init__(self):
+        self._t = threading.Thread(target=self._run, daemon=True)
+        self._t.start()
+        self._ts = []
+        t = threading.Thread(target=self._run, daemon=True)
+        self._ts.append(t)
+        t.start()
+
+    def _run(self):
+        pass
+
+    def stop(self):
+        self._t.join(2.0)
+        ts = list(self._ts)                # one level of local aliasing
+        for t in ts:
+            t.join(2.0)
+
+
+def closes(addr):
+    s = socket.create_connection(addr)
+    try:
+        s.sendall(b"x")
+    finally:
+        s.close()
+
+
+def hands_off(addr, registry):
+    s = socket.create_connection(addr)
+    registry.adopt(s)                      # ownership transferred: not a leak

@@ -1,0 +1,48 @@
+"""Known-good: one global nesting order; RLock re-entry is fine."""
+import threading
+
+
+class Ordered:
+    def __init__(self):
+        self._a = threading.Lock()
+        self._b = threading.Lock()
+
+    def one(self):
+        with self._a:
+            with self._b:
+                pass
+
+    def two(self):
+        with self._a:
+            with self._b:
+                pass
+
+
+class Reentrant:
+    def __init__(self):
+        self._r = threading.RLock()
+
+    def outer(self):
+        with self._r:
+            self.inner()           # fine: _r is reentrant
+
+    def inner(self):
+        with self._r:
+            pass
+
+
+class Annotated:
+    def __init__(self):
+        self._m = threading.Lock()
+        self._n = 0
+
+    def outer(self):
+        with self._m:
+            self._locked_helper()
+
+    def _helper_also_locks(self):
+        with self._m:          # called nowhere under _m: no self-edge
+            pass
+
+    def _locked_helper(self):  # holds: self._m
+        self._n += 1           # runs under the caller's _m, acquires nothing

@@ -1,0 +1,270 @@
+"""reprolint tests: every rule family fires on its known-bad fixture,
+stays quiet on the known-good one, the suppression syntax works, the
+baseline machinery grandfathers findings, and the linter runs clean on
+its own package (and on all of src/ — the CI acceptance criterion).
+
+Runtime half: the lock-order sanitizer detects a real inversion, stays
+quiet on consistent orders, and composes with threading.Condition.
+"""
+import json
+import subprocess
+import sys
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.lint import Baseline, lint_paths, runtime
+
+TESTS = Path(__file__).resolve().parent
+FIXTURES = TESTS / "lint_fixtures"
+SRC = TESTS.parent / "src"
+
+
+def _rules(path, rules=None):
+    return [f.rule for f in lint_paths([path], rules=rules)]
+
+
+# -- guarded-by -----------------------------------------------------------
+
+def test_guarded_by_fires_on_bad_fixture():
+    rules = _rules(FIXTURES / "bad_guarded.py", rules={"guarded-by"})
+    assert rules.count("guarded-by") == 3      # bump, peek, drop
+
+
+def test_guarded_by_clean_on_good_fixture():
+    assert _rules(FIXTURES / "good_guarded.py", rules={"guarded-by"}) == []
+
+
+# -- lock-order -----------------------------------------------------------
+
+def test_lock_order_cycle_fires_on_bad_fixture():
+    found = lint_paths([FIXTURES / "bad_lockorder.py"], rules={"lock-order"})
+    msgs = " ".join(f.message for f in found)
+    assert [f.rule for f in found].count("lock-order") == 2
+    assert "Inverted._a" in msgs and "Inverted._b" in msgs   # a<->b cycle
+    assert "SelfDeadlock._m" in msgs                         # self-edge
+
+
+def test_lock_order_clean_on_good_fixture():
+    assert _rules(FIXTURES / "good_lockorder.py", rules={"lock-order"}) == []
+
+
+# -- lifecycle ------------------------------------------------------------
+
+def test_thread_join_fires_on_bad_fixture():
+    rules = _rules(FIXTURES / "bad_lifecycle.py", rules={"thread-join"})
+    assert rules.count("thread-join") == 2     # tracked-but-unjoined + detached
+
+
+def test_socket_close_fires_on_bad_fixture():
+    rules = _rules(FIXTURES / "bad_lifecycle.py", rules={"socket-close"})
+    assert rules.count("socket-close") == 1
+
+
+def test_lifecycle_clean_on_good_fixture():
+    assert _rules(FIXTURES / "good_lifecycle.py",
+                  rules={"thread-join", "socket-close"}) == []
+
+
+# -- dispatch -------------------------------------------------------------
+
+def test_dispatch_return_fires_on_bad_fixture():
+    rules = _rules(FIXTURES / "bad_dispatch.py", rules={"dispatch-return"})
+    assert rules.count("dispatch-return") == 2  # fall-off-end + bare return
+
+
+def test_error_code_fires_on_bad_fixture():
+    rules = _rules(FIXTURES / "bad_dispatch.py", rules={"error-code"})
+    assert rules.count("error-code") == 1
+
+
+def test_dispatch_clean_on_good_fixture():
+    assert _rules(FIXTURES / "good_dispatch.py",
+                  rules={"dispatch-return", "error-code"}) == []
+
+
+# -- hygiene --------------------------------------------------------------
+
+def test_hygiene_bans_fire_on_bad_fixture():
+    rules = _rules(FIXTURES / "bad_hygiene.py")
+    for expected in ("bare-except", "mutable-default", "sleep-under-lock",
+                     "io-under-lock"):
+        assert rules.count(expected) == 1, (expected, rules)
+
+
+def test_hygiene_clean_on_good_fixture_with_suppression():
+    # good_hygiene contains a real sendall-under-lock, suppressed on the
+    # `with` line — proving the block-scope suppression syntax works
+    assert _rules(FIXTURES / "good_hygiene.py") == []
+
+
+def test_every_rule_family_has_a_firing_fixture():
+    """ISSUE acceptance: >= 5 rule families, each provably firing."""
+    fired = set()
+    for bad in FIXTURES.glob("bad_*.py"):
+        fired.update(_rules(bad))
+    assert {"guarded-by", "lock-order", "thread-join", "socket-close",
+            "dispatch-return", "error-code", "bare-except",
+            "mutable-default", "sleep-under-lock",
+            "io-under-lock"} <= fired
+
+
+# -- baseline / CLI -------------------------------------------------------
+
+def test_baseline_grandfathers_and_reports_stale(tmp_path):
+    findings = lint_paths([FIXTURES / "bad_hygiene.py"])
+    assert findings
+    bl_path = tmp_path / "bl.json"
+    Baseline.write(bl_path, findings)
+    bl = Baseline.load(bl_path)
+    new, old, stale = bl.split(findings)
+    assert not new and len(old) == len(findings) and not stale
+    # a baseline with an extra fingerprint reports it stale
+    data = json.loads(bl_path.read_text())
+    data["findings"].append(dict(data["findings"][0], fingerprint="ffffffff" * 2))
+    bl_path.write_text(json.dumps(data))
+    new, old, stale = Baseline.load(bl_path).split(findings)
+    assert not new and len(stale) == 1
+
+
+def test_cli_strict_exit_codes(tmp_path):
+    env_path = str(SRC)
+    base = [sys.executable, "-m", "repro.lint"]
+
+    def run(*args):
+        return subprocess.run(
+            base + list(args), capture_output=True, text=True,
+            env={"PYTHONPATH": env_path, "PATH": "/usr/bin:/bin:/usr/local/bin"},
+            cwd=str(TESTS.parent))
+
+    bad = str(FIXTURES / "bad_hygiene.py")
+    r = run(bad, "--strict", "--no-baseline")
+    assert r.returncode == 1 and "bare-except" in r.stdout
+    r = run(str(FIXTURES / "good_hygiene.py"), "--strict", "--no-baseline")
+    assert r.returncode == 0
+    # --write-baseline then --strict with it: grandfathered, exit 0
+    bl = tmp_path / "bl.json"
+    r = run(bad, "--write-baseline", "--baseline", str(bl))
+    assert r.returncode == 0
+    r = run(bad, "--strict", "--baseline", str(bl))
+    assert r.returncode == 0
+    r = run(bad, "--strict", "--no-baseline", "--json")
+    assert r.returncode == 1
+    payload = json.loads(r.stdout)
+    assert payload["findings"] and all("fingerprint" in f
+                                       for f in payload["findings"])
+
+
+# -- self-checks ----------------------------------------------------------
+
+def test_lint_clean_on_own_package():
+    assert lint_paths([SRC / "repro" / "lint"]) == []
+
+
+def test_lint_clean_on_whole_src_tree():
+    """The ISSUE acceptance criterion: empty baseline over src/."""
+    found = lint_paths([SRC])
+    assert found == [], "\n".join(f.render() for f in found)
+
+
+# -- runtime sanitizer ----------------------------------------------------
+
+@pytest.fixture
+def sanitizer():
+    was = runtime.installed()
+    runtime.install(force=True)
+    saved = runtime.report()
+    runtime.reset()
+    try:
+        yield runtime
+    finally:
+        runtime.reset()
+        # restore edges observed before this test so a REPRO_LOCKCHECK=1
+        # session keeps its cross-test order graph
+        with runtime._state_lock:
+            runtime._edges.update(saved.edges)
+        if not was:
+            runtime.uninstall()
+
+
+def test_runtime_detects_inversion(sanitizer):
+    lock_a = threading.Lock()
+    lock_b = threading.Lock()
+
+    def forward():
+        with lock_a:
+            with lock_b:
+                pass
+
+    t = threading.Thread(target=forward)
+    t.start()
+    t.join(5.0)
+    with lock_b:
+        with lock_a:               # reverse order: inversion
+            pass
+    inv = sanitizer.inversions()
+    assert len(inv) == 1
+    assert "test_lint.py" in inv[0]["first"]
+
+
+def test_runtime_quiet_on_consistent_order(sanitizer):
+    lock_a = threading.Lock()
+    lock_b = threading.Lock()
+    for _ in range(3):
+        with lock_a:
+            with lock_b:
+                pass
+    assert sanitizer.inversions() == []
+    assert sanitizer.report().edges   # the a->b edge was recorded
+
+
+def test_runtime_dedups_repeated_inversions(sanitizer):
+    lock_a = threading.Lock()
+    lock_b = threading.Lock()
+
+    def forward():
+        with lock_a:
+            with lock_b:
+                pass
+
+    t = threading.Thread(target=forward)
+    t.start()
+    t.join(5.0)
+    for _ in range(4):
+        with lock_b:
+            with lock_a:
+                pass
+    assert len(sanitizer.inversions()) == 1   # one report per lock pair
+
+
+def test_runtime_condition_compat_with_plain_lock(sanitizer):
+    """Condition(Lock()) must keep working: wait() releases through the
+    checked proxy and the held-stack stays balanced."""
+    cond = threading.Condition(threading.Lock())
+    fired = []
+
+    def waiter():
+        with cond:
+            while not fired:
+                cond.wait(2.0)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    with cond:
+        fired.append(1)
+        cond.notify_all()
+    t.join(5.0)
+    assert not t.is_alive()
+    assert sanitizer.inversions() == []
+    assert runtime._held() == []              # balanced in this thread
+
+
+def test_runtime_rlock_reentry_is_not_an_inversion(sanitizer):
+    r = threading.RLock()
+    with r:
+        with r:
+            pass
+    assert sanitizer.inversions() == []
