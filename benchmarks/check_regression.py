@@ -11,6 +11,7 @@ compares *dimensionless ratio metrics* — speedups and capacity multiples
     fig11  speedup_vs_proxy             (redirect beats full proxying)
            spread_min_over_mean         (the ring spreads the ingest)
     fig12  wire_reduction_x             (egress codecs still reduce)
+    fig13  goodput_vs_clean             (fault recovery stays cheap)
 
 A current row regresses when its metric drops more than ``--tolerance``
 (default 25%) below the committed snapshot's value; improvements always
@@ -42,6 +43,7 @@ SCHEMAS = {
     "fig11": (("row", "mode", "backends"),
               ("speedup_vs_proxy", "spread_min_over_mean")),
     "fig12": (("ds_kb", "codec", "wire"), ("wire_reduction_x",)),
+    "fig13": (("fault_pct", "wire"), ("goodput_vs_clean",)),
 }
 
 

@@ -1,0 +1,159 @@
+"""Fig 13 (beyond the paper): goodput under injected faults (DESIGN.md §15).
+
+The paper measures the in-transit pipeline on a healthy fabric; this
+sweep measures what the durability machinery costs when the fabric is
+*not* healthy. A seeded :class:`~repro.faults.FaultPlan` mangles a
+fraction of the stripe frames (CRC-rejected + resent) and severs a
+smaller fraction of the channel connections (failover + adoption), and
+every trial still requires the zero-loss contract: each dataset must be
+bit-identical at SAVIME after ``sync``.
+
+Stripes are forced onto the payload data plane for the run (the
+one-sided mmap store never touches the socket, so a loopback bench
+would otherwise hide the wire entirely — exactly the plane a remote
+fabric would use, and the one corruption can reach).
+
+The gated metric is ``goodput_vs_clean`` = faulty goodput / matched
+clean goodput — dimensionless, so it transfers between machines. The
+smoke gate requires >= 0.5 at a 1% fault rate: retry/replay may tax the
+stream, but it must not halve it.
+
+Prints one JSON row per fault rate:
+
+    {"fig": "fig13", "fault_pct": ..., "wire": "bin1",
+     "goodput_vs_clean": ..., "crc_errors": ..., "drops": ..., ...}
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import json
+import statistics
+import time
+
+import numpy as np
+
+from benchmarks.common import ci95, fresh_stack, write_rows
+from repro.faults import FaultPlan, injected
+from repro.transport import TransferSession, TransportConfig
+from repro.transport import channels as channels_mod
+
+
+@contextlib.contextmanager
+def payload_plane():
+    """Disable the one-sided mmap store so stripes carry their payload
+    on the socket (the remote-fabric plane the injector can reach)."""
+    saved = channels_mod.writer_for_reply
+    channels_mod.writer_for_reply = lambda h, n: None
+    try:
+        yield
+    finally:
+        channels_mod.writer_for_reply = saved
+
+
+def _plan(fault_pct: float, seed: int) -> FaultPlan:
+    """Corrupt ``fault_pct`` percent of stripe frames and sever channels
+    at a quarter of that rate (links die less often than frames mangle)."""
+    if fault_pct <= 0:
+        return FaultPlan(seed=seed)
+    p = fault_pct / 100.0
+    return FaultPlan.parse(
+        f"seed={seed};corrupt:op=stripe,prob={p},flips=3;"
+        f"drop:op=stripe,prob={p / 4}")
+
+
+def _trial(fault_pct: float, bufs: dict, seed: int) -> tuple[float, dict]:
+    """Ship ``bufs`` through a fresh striped bin1 stack under the fault
+    plan; returns (ingest wall time, fault/durability accounting) and
+    asserts the zero-loss contract at the endpoint."""
+    plan = _plan(fault_pct, seed)
+    with fresh_stack(mem_capacity=1 << 28, send_threads=2) as (sv, st):
+        cfg = TransportConfig(staging_addr=st.addr, n_channels=2,
+                              wire_format="bin1", stripe_bytes=32 << 10,
+                              io_threads=2, retry=6)
+        with injected(plan, scope=[st.addr]) as inj:
+            sess = TransferSession("rdma_staged", cfg).open()
+            t0 = time.perf_counter()
+            for n, b in bufs.items():
+                sess.write(n, b, dtype="float64")
+            sess.sync(timeout=120)
+            dt = time.perf_counter() - t0
+            sess.drain(timeout=120)
+            crc_errors = sess.server_stats().get("crc_errors", 0)
+            sess.close()
+        # the zero-loss contract: every acked dataset bit-identical
+        for n, b in bufs.items():
+            got = np.frombuffer(sv.engine.datasets[n], dtype=np.float64)
+            assert np.array_equal(got, b), \
+                f"{n}: data loss/corruption at fault_pct={fault_pct}"
+    return dt, {"corrupts": inj.fired.get("corrupt", 0),
+                "drops": inj.fired.get("drop", 0),
+                "crc_errors": int(crc_errors),
+                "replays": sess.stats.replays,
+                "failed_over": sum(c.get("failed_over", 0)
+                                   for c in sess.stats.channels)}
+
+
+def run(fault_pcts=(0.0, 1.0, 5.0), n_datasets=8, ds_kb=256, trials=3,
+        quiet=False):
+    rng = np.random.default_rng(13)
+    bufs = {f"f13_{i}": rng.standard_normal((ds_kb << 10) // 8)
+            for i in range(n_datasets)}
+    total = sum(b.nbytes for b in bufs.values())
+    rows = []
+    with payload_plane():
+        times = {p: [] for p in fault_pcts}
+        acct = {p: None for p in fault_pcts}
+        for t in range(trials):
+            for p in fault_pcts:         # matched: every rate per trial
+                dt, a = _trial(p, bufs, seed=int(p * 100) + t)
+                times[p].append(dt)
+                acct[p] = a
+    clean = statistics.median(times[fault_pcts[0]])
+    for p in fault_pcts:
+        med = statistics.median(times[p])
+        mean, ci = ci95(times[p])
+        a = acct[p]
+        row = {"fig": "fig13", "fault_pct": p, "wire": "bin1",
+               "n_datasets": n_datasets, "ds_kb": ds_kb,
+               "median_s": round(med, 6), "mean_s": round(mean, 6),
+               "ci95_s": round(ci, 6),
+               "gbps": round(total / med / 1e9, 4),
+               "corrupts": a["corrupts"], "drops": a["drops"],
+               "crc_errors": a["crc_errors"], "replays": a["replays"],
+               "failed_over": a["failed_over"],
+               "goodput_vs_clean": round(clean / med, 3)}
+        rows.append(row)
+        if not quiet:
+            print(json.dumps(row), flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small matched sweep + the 1%% goodput gate (CI)")
+    ap.add_argument("--full", action="store_true",
+                    help="more data / rates / trials (slower)")
+    ap.add_argument("--out", default=None,
+                    help="also write the rows to this JSON file")
+    args = ap.parse_args()
+    if args.smoke:
+        rows = run(fault_pcts=(0.0, 1.0), n_datasets=6, ds_kb=128,
+                   trials=2)
+        # every trial already asserted zero loss; the smoke gate is the
+        # throughput side of the contract — recovery must cost < 2x
+        by = {r["fault_pct"]: r for r in rows}
+        assert by[0.0]["goodput_vs_clean"] == 1.0, rows
+        assert by[1.0]["goodput_vs_clean"] >= 0.5, rows
+    elif args.full:
+        rows = run(fault_pcts=(0.0, 0.5, 1.0, 2.0, 5.0, 10.0),
+                   n_datasets=16, ds_kb=512, trials=5)
+    else:
+        rows = run()
+    if args.out:
+        write_rows(args.out, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -14,7 +14,8 @@ from repro.analysis.query import (  # noqa: F401
     Select, Statement, Window, tar,
 )
 from repro.analysis.session import (  # noqa: F401
-    AnalysisSession, AnalysisStats, QueryResult, SubtarEvent, Subscription,
+    AnalysisSession, AnalysisStats, QueryResult, SubscriptionClosed,
+    SubtarEvent, Subscription,
 )
 from repro.analysis import analyzers  # noqa: F401
 from repro.analysis.analyzers import (  # noqa: F401

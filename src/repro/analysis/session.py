@@ -27,8 +27,15 @@ from typing import Any, Iterator, Optional
 import numpy as np
 
 from repro.core import wire
+from repro.core.retry import RetryPolicy
 from repro.core.savime import SavimeClient, SavimeError
 from repro.analysis.query import Statement
+
+
+class SubscriptionClosed(ConnectionError):
+    """The subscription's push connection is gone (server died or the
+    subscription was closed) — distinct from ``poll()`` returning ``None``,
+    which only means nothing arrived within the timeout."""
 
 
 # ---------------------------------------------------------------------------
@@ -153,18 +160,28 @@ class Subscription:
             raise SavimeError(header.get("error", "subscribe failed"))
         self.start_seq = int(header.get("seq", 0))
 
+    @property
+    def closed(self) -> bool:
+        """True once the push connection is gone (server side or ours)."""
+        return self._closed
+
     def poll(self, timeout: Optional[float] = None) -> Optional[SubtarEvent]:
-        """Next event, or None after ``timeout`` seconds (or server gone)."""
+        """Next event, or ``None`` after ``timeout`` seconds of nothing
+        arriving. A dead server is not a timeout: it raises
+        :class:`SubscriptionClosed` (and sets :attr:`closed`), so a
+        supervision loop can tell "quiet" from "gone"."""
         if self._closed:
-            return None
+            raise SubscriptionClosed(
+                f"subscription to {self.tar!r} is closed")
         ready, _, _ = _select.select([self._sock], [], [], timeout)
         if not ready:
             return None
         try:
             header, _ = wire.recv_frame(self._sock)
-        except (ConnectionError, OSError):
+        except (ConnectionError, OSError) as e:
             self.close()
-            return None
+            raise SubscriptionClosed(
+                f"subscription to {self.tar!r}: server gone ({e})") from e
         if header.get("op") != "notify":
             return None
         self.n_events += 1
@@ -180,7 +197,10 @@ class Subscription:
     def __next__(self) -> SubtarEvent:
         if self.max_events is not None and self.n_events >= self.max_events:
             raise StopIteration
-        ev = self.poll(self.timeout)
+        try:
+            ev = self.poll(self.timeout)
+        except SubscriptionClosed:
+            raise StopIteration from None
         if ev is None:
             raise StopIteration
         return ev
@@ -222,6 +242,7 @@ class AnalysisSession:
     def __init__(self, addr: Optional[str] = None, *,
                  via: Optional[Any] = None, retries: int = 2,
                  retry_backoff_s: float = 0.05,
+                 deadline_s: Optional[float] = None,
                  label: Optional[str] = None):
         if (addr is None) == (via is None):
             raise ValueError(
@@ -230,6 +251,11 @@ class AnalysisSession:
         self._via = via
         self.retries = retries
         self.retry_backoff_s = retry_backoff_s
+        # shared retry engine (DESIGN.md §15): exponential backoff with
+        # full jitter, capped by an optional wall-clock deadline; exhausting
+        # it raises the typed RetryExhausted instead of the last bare error
+        self._retry = RetryPolicy(retries=retries, base_s=retry_backoff_s,
+                                  deadline_s=deadline_s)
         self.stats = AnalysisStats(
             endpoint=label or addr or f"via:{type(via).__name__}")
         self._cli: Optional[SavimeClient] = None
@@ -267,22 +293,25 @@ class AnalysisSession:
         t0 = time.perf_counter()
         attempts = 0
         retryable = getattr(stmt, "idempotent", False)
-        while True:
+        for attempt in self._retry.attempts(f"query {kind}"):
             attempts += 1
             try:
                 raw = self._run(q)
                 break
-            except (ConnectionError, OSError):
+            except (ConnectionError, OSError) as e:
                 # SavimeError (semantic) propagates immediately; only a
                 # lost connection on the session-owned path is retried,
                 # and only for idempotent statements — the server may
                 # have applied a create/load whose reply was lost
-                if self._cli is None or not retryable or \
-                        attempts > self.retries:
+                if self._cli is None or not retryable:
                     raise
                 self.stats.n_retries += 1
-                time.sleep(self.retry_backoff_s * attempts)
-                self._reconnect()
+                attempt.backoff(e)     # jittered sleep or RetryExhausted
+                try:
+                    self._reconnect()
+                except (ConnectionError, OSError):
+                    pass   # still down: next attempt backs off again,
+                #            so exhaustion surfaces as RetryExhausted
         if hasattr(stmt, "finalize"):
             raw = stmt.finalize(raw)
         elapsed = time.perf_counter() - t0

@@ -101,6 +101,14 @@ class Codec(abc.ABC):
                key: str = "") -> np.ndarray:
         """Return the raw bytes as a flat uint8 array."""
 
+    def reset(self, key: str = "") -> None:
+        """Forget any cross-dataset encoder state for ``key``.
+
+        Called before a *replayed* write (journal recovery): a chained
+        codec must emit a self-contained frame (``base=None``) because
+        the peer's decode chain may or may not have seen the original.
+        Stateless codecs need nothing — the default is a no-op."""
+
 
 _REGISTRY: Dict[str, type] = {}
 

@@ -119,6 +119,11 @@ class DeltaRleCodec(Codec):
         self._enc: Dict[str, Tuple[int, np.ndarray]] = {}
         self._dec: Dict[str, Tuple[int, np.ndarray]] = {}
 
+    def reset(self, key: str = "") -> None:
+        # next encode of this key is self-contained (base=None, seq=0):
+        # replay after a reconnect cannot assume the server's chain state
+        self._enc.pop(key, None)
+
     def encode(self, data, *, dtype: str = "uint8",
                key: str = "") -> Tuple[Any, Dict[str, Any]]:
         raw = as_bytes_array(data)

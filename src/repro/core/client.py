@@ -26,6 +26,7 @@ from repro.core import wire
 from repro.core.blocks import plan_blocks
 from repro.core.queues import FCFSPool, TaskHandle
 from repro.core.rdma import writer_for_reply
+from repro.core.retry import RetryPolicy
 
 Buf = Union[np.ndarray, bytes, bytearray, memoryview]
 
@@ -54,7 +55,8 @@ class Communicator:
                  credits: int = 4, wire_format: str = wire.WIRE_JSON,
                  coalesce_bytes: int = 0, linger_ms: float = 2.0,
                  gateway: bool = False, tenant: Optional[str] = None,
-                 codec: str = "none", decode_at: str = "staging"):
+                 codec: str = "none", decode_at: str = "staging",
+                 retry: int = 3, deadline_s: Optional[float] = None):
         if wire_format not in wire.SUPPORTED_WIRE:
             raise ValueError(f"unknown wire_format {wire_format!r}; "
                              f"supported: {', '.join(wire.SUPPORTED_WIRE)}")
@@ -64,6 +66,9 @@ class Communicator:
         self.addr = addr
         self.block_size = block_size
         self.wire_format = wire_format
+        # shared transfer retry policy (DESIGN.md §15): exponential
+        # backoff + full jitter, optional per-write deadline budget
+        self._retry = RetryPolicy(retries=retry, deadline_s=deadline_s)
         # egress reduction codec (DESIGN.md §13): encode happens centrally
         # in submit() so the block, coalesced and striped paths all ship
         # the same reduced bytes. The codec only activates once the peer
@@ -96,7 +101,8 @@ class Communicator:
                                         linger_ms=linger_ms)
         self._channel_opts = {"n_channels": n_channels,
                               "stripe_bytes": stripe_bytes or block_size,
-                              "credits": credits, "wire_format": wire_format}
+                              "credits": credits, "wire_format": wire_format,
+                              "retry": self._retry}
         self._groups: dict[str, object] = {}   # backend addr -> ChannelGroup
         self._groups_lock = threading.Lock()
         if n_channels > 1:
@@ -114,10 +120,11 @@ class Communicator:
         codecs = (self._codec.name,) if self._codec is not None else ()
         if self.wire_format == wire.WIRE_BIN1:
             # per-connection handshake; an old server leaves us on JSON
-            wire.negotiate(sock, codecs=codecs)
+            wire.negotiate(sock, codecs=codecs, caps=wire.SUPPORTED_CAPS)
         elif codecs:
             # codec negotiation without a wire upgrade: offer JSON only
-            wire.negotiate(sock, formats=(wire.WIRE_JSON,), codecs=codecs)
+            wire.negotiate(sock, formats=(wire.WIRE_JSON,), codecs=codecs,
+                           caps=wire.SUPPORTED_CAPS)
         return sock
 
     def _conn(self, addr: Optional[str] = None):
@@ -192,14 +199,36 @@ class Communicator:
 
     # -- the transfer task (runs on an I/O thread) -----------------------
     def _send(self, name: str, dtype: str, buf: np.ndarray,
-              addr: Optional[str] = None, cinfo: Optional[dict] = None) -> int:
+              addr: Optional[str] = None, cinfo: Optional[dict] = None,
+              epoch: Optional[str] = None) -> int:
+        """Block-path transfer with connection-level retry: a broken conn
+        is dropped from the cache, the write restarts from ``write_req``
+        after a jittered backoff (the epoch makes the restart idempotent —
+        a server that already finished this epoch just acks ``dup``)."""
+        for attempt in self._retry.attempts(f"write {name!r}"):
+            tgt = addr
+            try:
+                if tgt is None and self._gateway is not None:
+                    # re-admit on every attempt: after a backend fail-out
+                    # the gateway routes the retry onto the rebuilt ring
+                    tgt = self._gateway.admit(name, buf.nbytes, epoch=epoch)
+                return self._send_once(name, dtype, buf, tgt, cinfo, epoch)
+            except (ConnectionError, TimeoutError, OSError) as e:
+                self._socks.invalidate(tgt or self.addr)
+                attempt.backoff(e)   # raises RetryExhausted when spent
+
+    def _send_once(self, name: str, dtype: str, buf: np.ndarray,
+                   addr: Optional[str], cinfo: Optional[dict],
+                   epoch: Optional[str]) -> int:
         nbytes = buf.nbytes
-        if addr is None and self._gateway is not None:
-            addr = self._gateway.admit(name, nbytes)
         # NB: "nbytes" is reserved by the wire framing; use "size"
-        h = self._request(dict({"op": "write_req", "name": name,
-                                "dtype": dtype, "size": nbytes},
-                               **(cinfo or {})), addr=addr)
+        req = dict({"op": "write_req", "name": name,
+                    "dtype": dtype, "size": nbytes}, **(cinfo or {}))
+        if epoch is not None:
+            req["epoch"] = epoch
+        h = self._request(req, addr=addr)
+        if h.get("dup"):
+            return nbytes     # server already holds this epoch in full
         conn = self._conn(addr)
         use_bin = wire.negotiated(conn) == wire.WIRE_BIN1
         writer = writer_for_reply(h, nbytes)
@@ -265,18 +294,31 @@ class Communicator:
         for addr, group in by_addr.items():
             self._flush_one_batch(self._conn(addr), group)
 
-    def submit(self, name: str, dtype: str, buf: np.ndarray) -> TaskHandle:
+    def submit(self, name: str, dtype: str, buf: np.ndarray,
+               epoch: Optional[str] = None,
+               replay: bool = False) -> TaskHandle:
         cinfo = None
         if self._codec_active():
+            if replay:
+                # a replayed write cannot assume the server's decode chain
+                # saw the original: break the chain so this encode is
+                # self-contained (base=None), whatever landed before
+                with self._codec_lock:
+                    self._codec.reset(name)
             # one central encode feeds all three egress paths; downstream
             # decisions (coalescing threshold, striping plan) see the
             # *wire* size — that is the point of reducing first
             buf, cinfo = self._encode(name, dtype, buf)
-        if self._coalescer is not None and \
+        if not replay and self._coalescer is not None and \
                 buf.nbytes < self._coalescer.coalesce_bytes:
+            # replays skip the coalescer: recovery wants the write on the
+            # wire now, with its epoch checked individually, not parked
+            # behind a linger window in a batch that could fail as a unit
+            extra = cinfo if epoch is None else dict(cinfo or {},
+                                                     epoch=epoch)
             flat = buf.reshape(-1).view(np.uint8)
             return self._coalescer.add(name, dtype, flat, buf.nbytes,
-                                       extra=cinfo)
+                                       extra=extra)
         if self._channel_opts["n_channels"] > 1:
             # striped mode bypasses the I/O pool entirely: stripes are
             # enqueued onto the channels right away and datasets pipeline
@@ -289,19 +331,24 @@ class Communicator:
             if self._gateway is not None:
                 try:
                     group = self._group_for(
-                        self._gateway.admit(name, buf.nbytes))
+                        self._gateway.admit(name, buf.nbytes, epoch=epoch))
                 except Exception as e:  # noqa: BLE001 — typed quota/auth
                     h.complete(error=e)
                     return h
             else:
                 group = self._channels
-            tr = group.submit_dataset(name, dtype, buf, codec_info=cinfo)
+            try:
+                tr = group.submit_dataset(name, dtype, buf,
+                                          codec_info=cinfo, epoch=epoch)
+            except (ConnectionError, OSError) as e:
+                h.complete(error=e)      # RetryExhausted after reopens
+                return h
             tr.add_done_callback(
                 lambda t, h=h: h.complete(result=t.nbytes)
                 if t.error is None else h.complete(error=t.error))
             return h
         return self._pool.submit(self._send, name, dtype, buf, None, cinfo,
-                                 name=f"write-{name}")
+                                 epoch, name=f"write-{name}")
 
     def _all_groups(self) -> list:
         with self._groups_lock:

@@ -30,6 +30,7 @@ windows recover without waiting for the next ack.
 """
 from __future__ import annotations
 
+import collections
 import logging
 import math
 import os
@@ -37,6 +38,7 @@ import secrets
 import socket
 import threading
 import time
+import zlib
 from typing import Optional
 
 from repro import codec as codec_mod
@@ -47,6 +49,12 @@ from repro.core.rdma import MemoryRegion, PagedMemoryRegion
 from repro.core.savime import SavimeClient
 
 log = logging.getLogger(__name__)
+
+# bounded (name, epoch) replay-dedup log: large enough to cover every
+# epoch a producer could still replay (its journal is far smaller), small
+# enough to never matter for memory. A miss only means a re-ingest, which
+# SAVIME's last-write-wins load absorbs.
+_ACKED_CAP = 4096
 
 
 class _Dataset:
@@ -64,7 +72,12 @@ class _Dataset:
         self.stripes_seen: set[int] = set()
         self.credits_wanted: int = 4
         self.finished = False
-        self.last_stripe_at: float = 0.0
+        # activity clock for the abandoned-reservation reaper: starts at
+        # creation so an idle block-path reservation ages out too (0.0
+        # would make every fresh dataset instantly stale)
+        self.last_stripe_at: float = time.monotonic()
+        # producer-assigned replay identity (None for epoch-less writes)
+        self.epoch: Optional[str] = None
         # egress-codec state (DESIGN.md §13): nbytes is always the *wire*
         # size of the region; raw_size the decoded size it stands for
         self.codec: Optional[str] = None
@@ -83,6 +96,7 @@ class StagingServer:
         "_mem_used": "_alloc_lock",
         "_disk_used": "_alloc_lock",
         "_datasets": "_ds_lock",
+        "_acked": "_ds_lock",
         "_threads": "_threads_lock",
         "_conns": "_conn_lock",
         "_push_conns": "_conn_lock",
@@ -127,6 +141,9 @@ class StagingServer:
         # threads — every mutation goes through _ds_lock
         self._ds_lock = threading.Lock()
         self._datasets: dict[str, _Dataset] = {}
+        # (name, epoch) -> True for completed epoched ingests (bounded
+        # FIFO): replayed writes whose ack was lost dedup against this
+        self._acked: collections.OrderedDict = collections.OrderedDict()
         self._send_pool = FCFSPool(send_threads, "staging-send",
                                    straggler_timeout=straggler_timeout)
         self._savime_local = threading.local()
@@ -138,7 +155,8 @@ class StagingServer:
                       "stripes": 0, "stripe_dups": 0, "stripe_aborts": 0,
                       "batches": 0, "batched_datasets": 0,
                       "codec_datasets": 0, "codec_parked": 0,
-                      "bin_conns": 0, "credit_pushes": 0, "conns": 0}
+                      "bin_conns": 0, "credit_pushes": 0, "conns": 0,
+                      "replay_dups": 0, "crc_errors": 0}
         # egress-codec decode state (DESIGN.md §13): one decoder instance
         # per codec name (chained codecs keep per-dataset-name history),
         # serialized by _codec_mutex; a chained dataset that arrives before
@@ -352,6 +370,11 @@ class StagingServer:
                                 # the handler — return the lease
                                 if isinstance(payload, memoryview):
                                     pool.release(payload)
+                            if op == "hello" and reply.get("ok"):
+                                # remember the agreed caps on this conn:
+                                # stripe CRC verification is gated on them
+                                wire.set_negotiated_caps(
+                                    conn, reply.get("caps") or ())
                     except (ConnectionError, OSError):
                         return
                     if not _reply(reply, is_bin):
@@ -383,7 +406,8 @@ class StagingServer:
         if op == "ping":
             return {"ok": True}
         if op == "hello":
-            return wire.hello_reply(h, codecs=codec_mod.available())
+            return wire.hello_reply(h, codecs=codec_mod.available(),
+                                    caps=wire.SUPPORTED_CAPS)
         if op == "write_req":
             return self._op_write_req(h)
         if op == "reg_block":
@@ -420,13 +444,40 @@ class StagingServer:
             return out
         raise ValueError(f"unknown op {op!r}")
 
+    def _dup_reply(self, h: dict) -> Optional[dict]:
+        """Idempotent-replay check: a producer re-sending a journaled
+        write whose ack was lost must not double-ingest. ``None`` means
+        proceed; otherwise the positive ack to return as-is."""
+        epoch = h.get("epoch")
+        if not epoch:
+            return None
+        with self._ds_lock:
+            if (h["name"], epoch) not in self._acked:
+                return None
+        self.stats["replay_dups"] += 1
+        return {"ok": True, "dup": True, "file_id": "",
+                "credits": self._credit_grant(int(h.get("credits", 4)))}
+
+    def _apply_epoch(self, file_id: str, h: dict) -> None:
+        epoch = h.get("epoch")
+        if not epoch:
+            return
+        with self._ds_lock:
+            ds = self._datasets.get(file_id)
+            if ds is not None:
+                ds.epoch = str(epoch)
+
     def _op_write_req(self, h: dict) -> dict:
         nbytes = int(h["size"])
+        dup = self._dup_reply(h)
+        if dup is not None:
+            return dup
         cfields = self._parse_codec(h)   # validate before reserving
         if self._store is not None:
             rep = self._open_paged(h, nbytes)
             if rep is not None:
                 self._apply_codec(rep["file_id"], cfields)
+                self._apply_epoch(rep["file_id"], h)
                 return rep
             # unsealed demand exceeds the store even after spilling
             # everything cold — the paper's disk tier takes the overflow
@@ -461,6 +512,8 @@ class StagingServer:
                       region, in_memory)
         if cfields is not None:
             ds.codec, ds.cmeta, ds.raw_size, ds.decode_at = cfields
+        if h.get("epoch"):
+            ds.epoch = str(h["epoch"])
         with self._ds_lock:
             self._datasets[file_id] = ds
         return {"ok": True, "file_id": file_id, "path": path,
@@ -615,6 +668,7 @@ class StagingServer:
     def _op_reg_block(self, h: dict) -> dict:
         with self._ds_lock:
             ds = self._datasets[h["file_id"]]
+            ds.last_stripe_at = time.monotonic()   # keep the reaper away
         grant = ds.region.register_block(int(h["offset"]), int(h["size"]))
         self.stats["registrations"] += 1
         return {"ok": True, **grant}
@@ -630,6 +684,23 @@ class StagingServer:
         it, decode it if an egress codec applies at ingest, and queue the
         staging→SAVIME forward."""
         ds.received_at = time.perf_counter()
+        ds.finished = True    # universal: the reaper must skip forwards
+        if ds.epoch:
+            with self._ds_lock:
+                first = (ds.name, ds.epoch) not in self._acked
+                if first:
+                    self._acked[(ds.name, ds.epoch)] = True
+                    while len(self._acked) > _ACKED_CAP:
+                        self._acked.popitem(last=False)
+            if not first:
+                # a replayed transfer raced the original's completion —
+                # both finished. Keep the copy already forwarding; free
+                # this one without double-counting it.
+                self.stats["replay_dups"] += 1
+                with self._ds_lock:
+                    self._datasets.pop(ds.file_id, None)
+                self._free_dataset(ds)
+                return
         ds.region.deregister_all()   # paper: undo registration after sync
         if ds.region.paged:
             # fully received: pages become spillable / dedup-able
@@ -804,6 +875,9 @@ class StagingServer:
     # -- striped ingest (DESIGN.md §9) -----------------------------------
     def _op_stripe_open(self, h: dict) -> dict:
         self._gc_stale_stripes()
+        dup = self._dup_reply(h)
+        if dup is not None:
+            return dup               # replayed epoch: nothing to receive
         rep = self._op_write_req(h)
         n_stripes = int(h["n_stripes"])
         with self._ds_lock:
@@ -859,9 +933,25 @@ class StagingServer:
             self.stats["stripe_dups"] += 1
             return {"ok": True, "stripe_idx": idx, "dup": True,
                     "done": False, "credits": grant}
+        crc = None if h.get("sided") else h.get("crc")
+        check = crc is not None and \
+            wire.CAP_CRC in wire.negotiated_caps(conn)
         if nbytes:
+            csum = 0
             for seg in ds.region.segments(off, nbytes):
                 wire.recv_into(conn, seg)
+                if check:
+                    csum = zlib.crc32(seg, csum)
+            if check and (csum & 0xFFFFFFFF) != int(crc):
+                # payload fully consumed (framing intact) but mangled in
+                # flight: leave the stripe out of stripes_seen so the
+                # sender's re-send overwrites the garbage. The error text
+                # is the contract — bin1 acks carry no code field.
+                self.stats["crc_errors"] += 1
+                return {"ok": False, "code": "corrupt",
+                        "error": f"crc mismatch on stripe {idx} of "
+                                 f"{ds.name!r}",
+                        "stripe_idx": idx, "credits": grant}
         if span:
             # on-demand registration per stripe (paper: "the server
             # register each block as needed") — credit-granted rather than
@@ -882,16 +972,18 @@ class StagingServer:
                 "credits": grant}
 
     def _gc_stale_stripes(self) -> None:
-        """Reap striped datasets abandoned mid-transfer (client or channel
-        died): without this their capacity reservation never releases, and
-        since credit grants derive from ``_mem_used`` a few dead transfers
-        would permanently throttle every healthy client. Activity-based:
-        a credit-stalled sender still trickles stripes (grants are never
-        0), so only truly dead transfers age past the TTL."""
+        """Reap datasets abandoned mid-transfer (client or channel died):
+        without this their capacity reservation never releases, and since
+        credit grants derive from ``_mem_used`` a few dead transfers would
+        permanently throttle every healthy client. Covers block-path
+        ``write_req`` reservations whose sync never came as well as
+        striped ingests. Activity-based: a credit-stalled sender still
+        trickles stripes (grants are never 0) and one-sided writers touch
+        via reg_block, so only truly dead transfers age past the TTL."""
         now = time.monotonic()
         with self._ds_lock:
             stale = [ds for ds in self._datasets.values()
-                     if ds.n_stripes is not None and not ds.finished
+                     if not ds.finished
                      and now - ds.last_stripe_at > self.stripe_ttl]
             for ds in stale:
                 self._datasets.pop(ds.file_id, None)

@@ -43,10 +43,31 @@ import socket
 import struct
 import threading
 import weakref
+import zlib
 from typing import Any, Iterable, Optional, Sequence
 
 _LEN = struct.Struct(">Q")
 CHUNK = 1 << 20
+
+# ---------------------------------------------------------------------------
+# fault-injection hook (repro.faults installs / uninstalls it)
+# ---------------------------------------------------------------------------
+
+# When non-None, every frame sent on a socket *registered* with the
+# injector (wire.connect registers new sockets while a hook is up) passes
+# through it first — the injector may delay, duplicate, corrupt a copy of
+# the payload, or sever the connection (drop / partition).  None (the
+# default) is a zero-branch fast path.
+_FAULT_INJECTOR = None
+
+
+def set_fault_injector(inj) -> None:
+    global _FAULT_INJECTOR
+    _FAULT_INJECTOR = inj
+
+
+def fault_injector():
+    return _FAULT_INJECTOR
 
 # JSON headers are small dicts; a length prefix beyond this is a corrupt
 # or hostile stream, not a real frame — without the cap a bad 8-byte
@@ -125,6 +146,11 @@ def encode_bin_header(header: dict[str, Any], nbytes: int) -> Optional[bytes]:
         if header.get("sided"):
             flags |= F_SIDED
             size = int(header.get("size", 0))
+        else:
+            # non-sided stripes never used `size`; under CAP_CRC it
+            # carries the payload checksum (0 when crc is off — exactly
+            # what pre-crc senders always put there)
+            size = int(header.get("crc", 0))
         if header.get("enc"):
             flags |= F_ENC
     elif op == "reg_block":
@@ -179,6 +205,11 @@ def decode_bin_header(buf) -> dict[str, Any]:
                  offset=offset)
         if flags & F_SIDED:
             h.update(sided=1, size=size)
+        elif size:
+            # `size` on a non-sided stripe is the CAP_CRC checksum; the
+            # receiver only *verifies* it on connections that negotiated
+            # the capability, so a stray value from a buggy peer is inert
+            h["crc"] = size
         if flags & F_ENC:
             h["enc"] = 1
     elif op == "reg_block":
@@ -205,11 +236,35 @@ _NEGOTIATED: "weakref.WeakKeyDictionary[socket.socket, str]" = \
 # (or errors on hello entirely) and the sender falls back to `none`.
 _NEGOTIATED_CODECS: "weakref.WeakKeyDictionary[socket.socket, tuple]" = \
     weakref.WeakKeyDictionary()
+# Sockets mapped to extra capability names both peers agreed on (today
+# just CAP_CRC — payload checksums on stripe frames, DESIGN.md §15).
+_NEGOTIATED_CAPS: "weakref.WeakKeyDictionary[socket.socket, tuple]" = \
+    weakref.WeakKeyDictionary()
+
+# With CAP_CRC agreed, every non-sided stripe frame carries a CRC32 of
+# its payload: JSON stripes in header["crc"], bin1 stripes in the `size`
+# struct field (unused for non-sided stripes — sided stripes keep `size`
+# for the real region size and skip the checksum; their payload doesn't
+# ride this socket).  The capability gate is what keeps the 48-byte bin1
+# layout frozen: old peers never see a repurposed field.
+CAP_CRC = "crc32"
+SUPPORTED_CAPS = (CAP_CRC,)
+
+
+def crc32(payload) -> int:
+    """CRC32 over a payload (bytes-like or list of bytes-like)."""
+    parts = (payload if isinstance(payload, (list, tuple))
+             else [] if payload is None else [payload])
+    c = 0
+    for p in parts:
+        c = zlib.crc32(memoryview(p).cast("B"), c)
+    return c & 0xFFFFFFFF
 
 
 def negotiate(sock: socket.socket,
               formats: Sequence[str] = SUPPORTED_WIRE,
-              codecs: Sequence[str] = ()) -> str:
+              codecs: Sequence[str] = (),
+              caps: Sequence[str] = ()) -> str:
     """Wire-format (+ codec) handshake: offer, adopt the server's pick.
 
     A server that predates the handshake answers the unknown ``hello`` op
@@ -221,6 +276,8 @@ def negotiate(sock: socket.socket,
     offer: dict[str, Any] = {"op": "hello", "wire": list(formats)}
     if codecs:
         offer["codecs"] = list(codecs)
+    if caps:
+        offer["caps"] = list(caps)
     h, _ = request(sock, offer)
     fmt = h.get("wire") if h.get("ok") else None
     if fmt not in formats:
@@ -229,6 +286,9 @@ def negotiate(sock: socket.socket,
     accepted = h.get("codecs") if h.get("ok") else None
     _NEGOTIATED_CODECS[sock] = tuple(
         c for c in (accepted or ()) if c in codecs)
+    agreed = h.get("caps") if h.get("ok") else None
+    _NEGOTIATED_CAPS[sock] = tuple(
+        c for c in (agreed or ()) if c in caps)
     return fmt
 
 
@@ -242,9 +302,21 @@ def negotiated_codecs(sock: socket.socket) -> tuple:
     return _NEGOTIATED_CODECS.get(sock, ())
 
 
+def negotiated_caps(sock: socket.socket) -> tuple:
+    """Extra capabilities both peers agreed on (empty pre-handshake)."""
+    return _NEGOTIATED_CAPS.get(sock, ())
+
+
+def set_negotiated_caps(sock: socket.socket, caps: Sequence[str]) -> None:
+    """Record the agreed capability set server-side (the server learns
+    the intersection when it builds its ``hello`` reply)."""
+    _NEGOTIATED_CAPS[sock] = tuple(caps)
+
+
 def hello_reply(header: dict[str, Any],
                 supported: Sequence[str] = SUPPORTED_WIRE,
-                codecs: Sequence[str] = ()) -> dict[str, Any]:
+                codecs: Sequence[str] = (),
+                caps: Sequence[str] = ()) -> dict[str, Any]:
     """Server side of the handshake: pick the client's most-preferred
     format this server also speaks (JSON is always common ground), and
     echo the subset of offered codecs this server can decode. Old clients
@@ -258,6 +330,9 @@ def hello_reply(header: dict[str, Any],
     offered = header.get("codecs")
     if offered and codecs:
         reply["codecs"] = [c for c in offered if c in codecs]
+    offered_caps = header.get("caps")
+    if offered_caps and caps:
+        reply["caps"] = [c for c in offered_caps if c in caps]
     return reply
 
 
@@ -401,19 +476,31 @@ def sendmsg_all(sock: socket.socket, bufs: Sequence) -> None:
 def send_frame(sock: socket.socket, header: dict[str, Any],
                payload: Optional[memoryview | bytes] = None) -> None:
     """Legacy JSON frame send (byte-identical to the pre-bin1 wire)."""
-    payload = b"" if payload is None else payload
-    clean = {k: v for k, v in header.items() if not k.startswith("_")}
-    hb = json.dumps(dict(clean, nbytes=len(payload))).encode()
-    sock.sendall(_LEN.pack(len(hb)) + hb)
-    if len(payload):
-        sock.sendall(payload)
+    inj = _FAULT_INJECTOR
+    frames = [(header, payload)]
+    if inj is not None:
+        frames = inj.on_send(sock, frames)
+    for header, payload in frames:
+        payload = b"" if payload is None else payload
+        clean = {k: v for k, v in header.items() if not k.startswith("_")}
+        hb = json.dumps(dict(clean, nbytes=len(payload))).encode()
+        sock.sendall(_LEN.pack(len(hb)) + hb)
+        if len(payload):
+            sock.sendall(payload)
 
 
 def send_frame_bin(sock: socket.socket, header: dict[str, Any],
                    payload=None) -> None:
     """Send one frame on the bin1 fast path (one ``sendmsg`` for header +
     payload); non-hot headers transparently ride JSON."""
-    sendmsg_all(sock, encode_frame(header, payload, WIRE_BIN1))
+    inj = _FAULT_INJECTOR
+    frames = [(header, payload)]
+    if inj is not None:
+        frames = inj.on_send(sock, frames)
+    bufs: list = []
+    for h, p in frames:
+        bufs.extend(encode_frame(h, p, WIRE_BIN1))
+    sendmsg_all(sock, bufs)
 
 
 def send_frames_vectored(sock: socket.socket,
@@ -422,6 +509,9 @@ def send_frames_vectored(sock: socket.socket,
     ``sendmsg`` calls as possible (one, below the iovec cap).  ``payload``
     may itself be a list of buffers — nothing is concatenated in user
     space.  Returns the number of frames sent."""
+    inj = _FAULT_INJECTOR
+    if inj is not None:
+        frames = inj.on_send(sock, list(frames))
     bufs: list = []
     n = 0
     for header, payload in frames:
@@ -546,6 +636,9 @@ def drain_payload(sock: socket.socket, header: dict[str, Any]) -> None:
 def recv_frame(sock: socket.socket,
                pool: Optional[BufferPool] = None) -> tuple[dict[str, Any], Any]:
     header = recv_header(sock)
+    inj = _FAULT_INJECTOR
+    if inj is not None:
+        inj.on_recv(sock, header)
     payload = recv_payload(sock, header, pool)
     # binary error acks carry their message as the payload
     if header.get("_bin") and header.get("op") == "ack" \
@@ -561,9 +654,14 @@ def request(sock: socket.socket, header: dict[str, Any],
 
 
 def connect(addr: str, timeout: float = 30.0) -> socket.socket:
+    inj = _FAULT_INJECTOR
+    if inj is not None:
+        inj.check_connect(addr)      # active partition => ConnectionError
     host, port = addr.rsplit(":", 1)
     s = socket.create_connection((host, int(port)), timeout=timeout)
     s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+    if inj is not None:
+        inj.register(s, addr)        # bring the new conn into fault scope
     return s
 
 
@@ -596,6 +694,24 @@ class ConnCache:
             with self._lock:
                 self._all.append(obj)
         return obj
+
+    def invalidate(self, addr: str) -> None:
+        """Drop (and close) the *calling thread's* cached connection to
+        ``addr`` — the reconnect path after a send/recv error, so the next
+        ``get`` builds a fresh one instead of reusing a dead socket."""
+        objs = getattr(self._local, "objs", None)
+        obj = objs.pop(addr, None) if objs else None
+        if obj is None:
+            return
+        with self._lock:
+            try:
+                self._all.remove(obj)
+            except ValueError:
+                pass
+        try:
+            obj.close()
+        except (OSError, RuntimeError):
+            pass
 
     def close_all(self) -> None:
         with self._lock:

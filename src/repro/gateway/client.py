@@ -21,6 +21,7 @@ import threading
 from typing import Optional, Sequence
 
 from repro.core import wire
+from repro.core.retry import RetryPolicy
 from repro.gateway.ring import HashRing, RingNode
 from repro.gateway.tenancy import error_from_reply
 
@@ -28,10 +29,12 @@ from repro.gateway.tenancy import error_from_reply
 class GatewayClient:
     """One locked control connection + a cached placement ring."""
 
-    def __init__(self, addr: str, tenant: Optional[str] = None):
+    def __init__(self, addr: str, tenant: Optional[str] = None, *,
+                 retry: Optional[RetryPolicy] = None):
         self.addr = addr
         self.tenant = tenant
         self._lock = threading.Lock()
+        self._retry = retry or RetryPolicy()
         self._sock = wire.connect(addr)
         self.ring: Optional[HashRing] = None
         self.epoch: Optional[str] = None
@@ -41,13 +44,32 @@ class GatewayClient:
     def _request(self, header: dict) -> dict:
         if self.tenant and "tenant" not in header:
             header = dict(header, tenant=self.tenant)
-        # the lock serializes request/reply pairs on the one control
-        # conn — blocking under it is the point
-        with self._lock:  # lint: ignore[io-under-lock]
-            h, _ = wire.request(self._sock, header)
+        for attempt in self._retry.attempts(f"gateway {header.get('op')}"):
+            try:
+                # the lock serializes request/reply pairs on the one
+                # control conn — blocking under it is the point
+                with self._lock:  # lint: ignore[io-under-lock]
+                    h, _ = wire.request(self._sock, header)
+                break
+            except (ConnectionError, TimeoutError, OSError) as e:
+                attempt.backoff(e)          # jittered sleep, outside _lock
+                try:
+                    self._reconnect()
+                except (ConnectionError, OSError):
+                    pass    # still down: the next attempt backs off again
         if not h.get("ok"):
             raise error_from_reply(h, f"gateway {header.get('op')} failed")
         return h
+
+    def _reconnect(self) -> None:
+        # the dial under the lock *is* the serialisation: concurrent
+        # _request retries must not race a half-swapped control conn
+        with self._lock:  # lint: ignore[io-under-lock]
+            old, self._sock = self._sock, wire.connect(self.addr)
+        try:
+            old.close()
+        except OSError:
+            pass
 
     def refresh(self) -> HashRing:
         """Re-fetch the authoritative ring (join/leave happened)."""
@@ -64,10 +86,17 @@ class GatewayClient:
             except (OSError, RuntimeError):
                 pass     # stale cache only costs extra refreshes, not data
 
-    def admit(self, name: str, size: int) -> str:
+    def admit(self, name: str, size: int,
+              epoch: Optional[str] = None) -> str:
         """Admit one dataset (auth + quota + placement); returns the
-        backend address the data plane must target."""
-        h = self._request({"op": "admit", "name": name, "size": int(size)})
+        backend address the data plane must target. ``epoch`` is the
+        producer's replay identity: a re-admit of the same (name, epoch)
+        is not re-charged against the tenant, and the gateway moves the
+        parity accounting if placement changed (backend fail-out)."""
+        req = {"op": "admit", "name": name, "size": int(size)}
+        if epoch is not None:
+            req["epoch"] = str(epoch)
+        h = self._request(req)
         self._adopt_epoch(h)
         return h["addr"]
 

@@ -13,6 +13,7 @@ Used by the launchers (``--pool N``), the gateway tests, and
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Iterable, Optional, Sequence
 
 from repro.core.savime import SavimeServer
@@ -116,3 +117,44 @@ class StagingPool:
         acked datasets must remain queryable); health probes will fail
         it out of the ring."""
         self.stagings[i].stop()
+
+    # -- fault harness ---------------------------------------------------
+    @contextlib.contextmanager
+    def with_faults(self, plan):
+        """Run a :class:`~repro.faults.FaultPlan` against this pool.
+
+            with pool.with_faults(FaultPlan.parse(spec)) as harness:
+                ... drive traffic; harness.injector.fired /
+                    harness.scheduler.killed tell what happened ...
+
+        Wire rules apply only to client connections targeting the pool
+        (gateway + backend staging addrs); kill rules resolve
+        ``staging:i`` / ``savime:i`` / ``gateway`` targets to this
+        pool's processes. Install/uninstall is scoped to the block.
+        """
+        from repro.faults.inject import injected
+        from repro.faults.sched import FaultScheduler
+        if self.gateway is None:
+            raise RuntimeError("pool is not running")
+        scope = [self.addr] + [st.addr for st in self.stagings] \
+            + [sv.addr for sv in self.savimes]
+        targets = {"gateway": self.gateway.stop}
+        for i, st in enumerate(self.stagings):
+            targets[f"staging:{i}"] = st.stop
+        for i, sv in enumerate(self.savimes):
+            targets[f"savime:{i}"] = sv.stop
+        with injected(plan, scope=scope) as inj:
+            sched = FaultScheduler(plan, targets).start()
+            harness = _FaultHarness(inj, sched)
+            try:
+                yield harness
+            finally:
+                sched.stop()
+
+
+class _FaultHarness:
+    """What ``with_faults`` yields: both halves of the running harness."""
+
+    def __init__(self, injector, scheduler):
+        self.injector = injector
+        self.scheduler = scheduler

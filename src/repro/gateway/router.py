@@ -45,7 +45,8 @@ import numpy as np
 from repro.core import wire
 from repro.core.savime import SavimeClient, SavimeError, _parse_call
 from repro.analysis.query import Aggregate, Select, Statement
-from repro.analysis.session import (AnalysisStats, QueryResult, Subscription,
+from repro.analysis.session import (AnalysisStats, QueryResult,
+                                    SubscriptionClosed, Subscription,
                                     SubtarEvent)
 
 Box = tuple[tuple[int, ...], tuple[int, ...]]
@@ -263,7 +264,10 @@ class MultiSubscription:
                 else max(deadline - time.monotonic(), 0.0)
             ready, _, _ = _select.select(list(live), [], [], remaining)
             for sock in ready:
-                ev = live[sock].poll(0)
+                try:
+                    ev = live[sock].poll(0)
+                except SubscriptionClosed:
+                    continue        # one backend gone; survivors keep going
                 if ev is not None:
                     self.n_events += 1
                     return ev

@@ -35,6 +35,7 @@ a gateway-backed transport sees one coherent engine.
 """
 from __future__ import annotations
 
+import collections
 import math
 import socket
 import threading
@@ -50,6 +51,10 @@ from repro.gateway.tenancy import (AuthError, QuotaExceededError, Tenant,
 
 # wanted-credit guess when a relayed ack has no stripe_open context
 DEFAULT_WANTED = 8
+
+# (name, epoch) admit-log bound: replay identities older than the last
+# this-many admits can no longer dedup (matches the staging server's cap)
+_ADMIT_LOG_CAP = 4096
 
 
 class Backend:
@@ -86,6 +91,7 @@ class GatewayServer:
         "ring": "_lock",
         "_file_map": "_lock",
         "_ds_map": "_lock",
+        "_admit_log": "_lock",
         "_threads": "_threads_lock",
         "_conns": "_conn_lock",
     }
@@ -115,9 +121,12 @@ class GatewayServer:
                              vnodes)
         self._file_map: dict[str, tuple[str, int]] = {}  # fid -> (backend, wanted)
         self._ds_map: dict[str, str] = {}                # dataset -> backend
+        # (name, epoch) -> (backend, size): replay identities already
+        # admitted, so a client retry is not double-charged (DESIGN.md §15)
+        self._admit_log: collections.OrderedDict = collections.OrderedDict()
         self.stats = {"conns": 0, "admits": 0, "rejects": 0,
                       "redirected_bytes": 0, "proxied_ops": 0,
-                      "proxied_bytes": 0, "queries": 0,
+                      "proxied_bytes": 0, "queries": 0, "readmits": 0,
                       "remaps": 0, "rejoins": 0, "ring_fetches": 0}
         self._savime_local = threading.local()
         self._probe_socks: dict[str, socket.socket] = {}
@@ -441,13 +450,50 @@ class GatewayServer:
     def _op_admit(self, state: dict, h: dict) -> dict:
         tenant = self._auth(state, h)
         size = int(h.get("size", 0))
-        b = self._place(h["name"])
+        name = h["name"]
+        epoch = h.get("epoch")
+        b = self._place(name)
+        if epoch is not None:
+            rep = self._readmit(name, str(epoch), size, b)
+            if rep is not None:
+                return rep
         self.tenants.charge(tenant, size)
-        self._record_admit(b, h["name"], size)
+        self._record_admit(b, name, size)
+        if epoch is not None:
+            with self._lock:
+                self._admit_log[(name, str(epoch))] = (b.name, size)
+                while len(self._admit_log) > _ADMIT_LOG_CAP:
+                    self._admit_log.popitem(last=False)
         self.stats["admits"] += 1
         self.stats["redirected_bytes"] += size
         return {"ok": True, "addr": b.addr, "backend": b.name,
                 "epoch": self.epoch}
+
+    def _readmit(self, name: str, epoch: str, size: int,
+                 b: Backend) -> Optional[dict]:
+        """Handle an admit whose (name, epoch) was already admitted — a
+        journal replay after a reconnect or a backend fail-out. The
+        tenant was charged the first time, so only the parity accounting
+        moves: the original backend's counters are reversed and the new
+        placement charged (a no-op when placement is unchanged — the
+        backend itself dedups the replayed write)."""
+        with self._lock:
+            prev = self._admit_log.get((name, epoch))
+            if prev is None:
+                return None
+            old_name, old_size = prev
+            old_b = self.backends.get(old_name)
+            if old_name != b.name:
+                if old_b is not None:
+                    old_b.admitted_bytes -= old_size
+                    old_b.admitted_datasets -= 1
+                b.admitted_bytes += size
+                b.admitted_datasets += 1
+            self._ds_map[name] = b.name
+            self._admit_log[(name, epoch)] = (b.name, size)
+        self.stats["readmits"] += 1
+        return {"ok": True, "addr": b.addr, "backend": b.name,
+                "dup": True, "epoch": self.epoch}
 
     def _op_admit_batch(self, state: dict, h: dict) -> dict:
         tenant = self._auth(state, h)

@@ -85,6 +85,11 @@ def main() -> None:
     ap.add_argument("--quota-mb", type=int, default=0,
                     help="per-tenant byte quota in MiB (needs --pool; "
                          "0 = unlimited)")
+    ap.add_argument("--faults", default=None,
+                    help="seeded fault plan for the staging path — a DSL "
+                         "string ('seed=42;drop:op=stripe,prob=0.01;"
+                         "kill:target=staging:0,at_s=0.5') or a JSON plan "
+                         "file; exercises retry/replay (DESIGN.md §15)")
     args = ap.parse_args()
     if args.analyzer and not args.intransit:
         ap.error("--analyzer requires --intransit")
@@ -109,7 +114,7 @@ def main() -> None:
     prefill = jax.jit(setup.prefill_fn(max_len=S + N))
     decode = jax.jit(setup.decode_fn(), donate_argnums=(1,))
 
-    sink = staging = savime = pool = None
+    sink = staging = savime = pool = fault_sched = None
     tenant_token = None
     if args.intransit:
         from repro.core import (InTransitConfig, InTransitSink, SavimeServer,
@@ -142,6 +147,25 @@ def main() -> None:
                                     dedup=args.dedup).start()
             sink_addr = (staging.addr if args.transport == "rdma_staged"
                          else savime.addr)
+        if args.faults:
+            from repro.faults import FaultPlan, FaultScheduler, install
+            plan = FaultPlan.parse(args.faults)
+            if pool is not None:
+                scope = [pool.addr] + [st.addr for st in pool.stagings] \
+                    + [sv.addr for sv in pool.savimes]
+                targets = {"gateway": pool.gateway.stop}
+                for i, st in enumerate(pool.stagings):
+                    targets[f"staging:{i}"] = st.stop
+                for i, sv in enumerate(pool.savimes):
+                    targets[f"savime:{i}"] = sv.stop
+            else:
+                scope = [staging.addr, savime.addr]
+                targets = {"staging:0": staging.stop,
+                           "savime:0": savime.stop}
+            install(plan, scope=scope)
+            fault_sched = FaultScheduler(plan, targets).start()
+            print(f"[serve] fault plan armed (seed={plan.seed}, "
+                  f"{len(plan.rules)} rule(s))")
         sink = InTransitSink(sink_addr,
                              InTransitConfig(tar_prefix="serve",
                                              transport=args.transport,
@@ -209,6 +233,10 @@ def main() -> None:
                 print(f"[serve] analyzer[{s.analyzer}] over "
                       f"{res.shape} staged latencies: {s.payload}")
         sink.close()
+        if fault_sched is not None:
+            from repro.faults import uninstall
+            fault_sched.stop()
+            uninstall()
         if pool is not None:
             gw = sink.session.stats.gateway
             if gw:

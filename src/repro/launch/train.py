@@ -86,6 +86,11 @@ def main() -> None:
     ap.add_argument("--compress-pods", action="store_true")
     ap.add_argument("--egress", default="diag",
                     choices=["none", "diag", "grads_int8"])
+    ap.add_argument("--faults", default=None,
+                    help="seeded fault plan for the staging path — a DSL "
+                         "string ('seed=42;drop:op=stripe,prob=0.01;"
+                         "kill:target=staging:0,at_s=0.5') or a JSON plan "
+                         "file; exercises retry/replay (DESIGN.md §15)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -103,12 +108,22 @@ def main() -> None:
     state = setup.init_state(jax.random.PRNGKey(0))
 
     sink = savime = staging = None
+    fault_sched = None
     if args.intransit:
         savime = SavimeServer().start()
         staging = StagingServer(savime.addr,
                                 page_bytes=args.page_kb << 10,
                                 spill_dir=args.spill_dir,
                                 dedup=args.dedup).start()
+        if args.faults:
+            from repro.faults import FaultPlan, FaultScheduler, install
+            plan = FaultPlan.parse(args.faults)
+            install(plan, scope=[staging.addr, savime.addr])
+            fault_sched = FaultScheduler(plan, {
+                "staging:0": staging.stop,
+                "savime:0": savime.stop}).start()
+            print(f"[train] fault plan armed (seed={plan.seed}, "
+                  f"{len(plan.rules)} rule(s))")
         # the staged path attaches to staging; copy-emulation transports
         # (scp_*, ssh_direct) reach SAVIME directly, as the baselines do
         sink_addr = (staging.addr if args.transport == "rdma_staged"
@@ -154,6 +169,10 @@ def main() -> None:
         print(f"[train] staged {sink.staged_arrays} arrays, "
               f"{sink.staged_bytes / 1e6:.1f} MB into SAVIME")
         sink.close()
+        if fault_sched is not None:
+            from repro.faults import uninstall
+            fault_sched.stop()
+            uninstall()
         staging.stop()
         savime.stop()
 

@@ -1,3 +1,4 @@
 from repro.runtime.fault_tolerance import (  # noqa: F401
-    InjectedFailure, Supervisor, SupervisorConfig, plan_mesh,
+    InjectedFailure, RestartBudgetExceeded, Supervisor, SupervisorConfig,
+    plan_mesh,
 )

@@ -25,6 +25,22 @@ class InjectedFailure(RuntimeError):
     pass
 
 
+class RestartBudgetExceeded(RuntimeError):
+    """The supervisor burned through ``max_restarts``; carries enough to
+    resume by hand (the last committed checkpoint step)."""
+
+    def __init__(self, restarts: int, max_restarts: int,
+                 last_checkpoint_step: Optional[int], cause: BaseException):
+        self.restarts = restarts
+        self.max_restarts = max_restarts
+        self.last_checkpoint_step = last_checkpoint_step
+        at = ("no checkpoint committed" if last_checkpoint_step is None
+              else f"last checkpoint at step {last_checkpoint_step}")
+        super().__init__(
+            f"supervisor exceeded max_restarts={max_restarts} "
+            f"({restarts} restarts; {at}): {cause}")
+
+
 @dataclasses.dataclass
 class SupervisorConfig:
     ckpt_every: int = 50
@@ -58,7 +74,9 @@ class Supervisor:
             except (InjectedFailure, jax.errors.JaxRuntimeError) as e:
                 self.restarts += 1
                 if self.restarts > self.cfg.max_restarts:
-                    raise
+                    raise RestartBudgetExceeded(
+                        self.restarts, self.cfg.max_restarts,
+                        self.ckpt.latest_step(), e) from e
                 self.ckpt.wait()
                 if abstract_state is None:
                     raise RuntimeError("no abstract_state for restore") from e

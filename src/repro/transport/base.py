@@ -59,6 +59,10 @@ class TransportConfig:
     codec: str = "none"                   # egress reduction codec (§13)
     decode_at: str = "staging"            # "staging" (ingest) | "query"
     #                                       (store compressed, lazy decode)
+    retry: int = 3                        # transfer retries per write (§15)
+    deadline_s: Optional[float] = None    # retry budget per write (None = off)
+    journal: bool = True                  # in-flight journal + replay on
+    #                                       reconnect (replay-capable engines)
     extra: dict = dataclasses.field(default_factory=dict)
 
     def replace(self, **kw) -> "TransportConfig":
@@ -94,6 +98,11 @@ class TransferStats:
     # egress-codec accounting (raw vs wire bytes, encode time) when a
     # reduction codec is configured (cfg.codec != "none"); empty otherwise
     codec: dict = dataclasses.field(default_factory=dict)
+    # durability accounting (DESIGN.md §15): writes replayed from the
+    # in-flight journal after a reconnect, and replays the receiver
+    # recognised as already-acked epochs (no double ingest)
+    replays: int = 0
+    replay_dups: int = 0
 
     @property
     def staging_gbps(self) -> float:
@@ -134,6 +143,8 @@ class TransferStats:
             out.end_to_end_s = max(out.end_to_end_s, s.end_to_end_s)
             out.peak_inflight_bytes = max(out.peak_inflight_bytes,
                                           s.peak_inflight_bytes)
+            out.replays += s.replays
+            out.replay_dups += s.replay_dups
             out.channels.extend(s.channels)
             if s.gateway:
                 out.gateway = dict(s.gateway)   # latest fleet snapshot
@@ -166,6 +177,11 @@ class Transport(abc.ABC):
     """
 
     name: str = "abstract"
+    # engines that thread a producer-assigned (name, epoch) identity down
+    # to the receiver (idempotent replay, DESIGN.md §15) set this True
+    # and override write_epoch; the session only journals writes when the
+    # engine can actually replay them safely
+    supports_replay: bool = False
 
     def __init__(self, cfg: TransportConfig):
         self.cfg = cfg
@@ -177,6 +193,13 @@ class Transport(abc.ABC):
     @abc.abstractmethod
     def write(self, name: str, dtype: str, buf) -> Any:
         """Enqueue one named buffer; returns a completion handle."""
+
+    def write_epoch(self, name: str, dtype: str, buf, epoch: str,
+                    replay: bool = False) -> Any:
+        """``write`` carrying a replay identity. Engines without epoch
+        support fall back to a plain write (``supports_replay`` stays
+        False, so the session never journals against them)."""
+        return self.write(name, dtype, buf)
 
     @abc.abstractmethod
     def sync(self, timeout: Optional[float] = None) -> None:

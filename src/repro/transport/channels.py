@@ -70,9 +70,14 @@ import numpy as np
 from repro.core import wire
 from repro.core.blocks import plan_blocks
 from repro.core.rdma import RdmaWriter, writer_for_reply
+from repro.core.retry import RetryPolicy
 
 DEFAULT_STRIPE_BYTES = 4 << 20
 DEFAULT_CREDITS = 4
+
+# consecutive CRC-rejected stripes before a bin1 channel falls back to
+# JSON frames (persistent corruption on the binary path — DESIGN.md §15)
+_CRC_FALLBACK_AFTER = 3
 
 
 @dataclasses.dataclass
@@ -86,6 +91,10 @@ class ChannelStats:
     credit_wait_s: float = 0.0  # time the sender blocked waiting for credit
     peak_unacked: int = 0       # high-water mark of in-flight stripes
     window: int = 0             # last grant from the receiver
+    failed_over: int = 0        # stripes re-homed away when this chan died
+    adopted: int = 0            # stripes re-homed onto this channel
+    crc_retries: int = 0        # stripes resent after a CRC rejection
+    wire_fallbacks: int = 0     # bin1 -> JSON downgrades (persistent CRC)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -197,11 +206,16 @@ class _Channel:
 
     def __init__(self, index: int, addr: str, credits: int,
                  connect: Callable, send_frame: Callable,
-                 wire_format: str = wire.WIRE_JSON):
+                 wire_format: str = wire.WIRE_JSON,
+                 on_fail: Optional[Callable] = None):
         self.index = index
         self.stats = ChannelStats(channel=index, window=credits)
         self._send_frame = send_frame
         self._fmt = wire_format
+        # when a channel dies, its queued + in-flight stripes are handed
+        # to this group hook for re-homing on surviving channels instead
+        # of failing their transfers (None keeps the fail-fast behaviour)
+        self._on_fail = on_fail
         # vectored bursts re-encode frames; only safe on the stock frame
         # writer (a custom send_frame carries an engine's own cost model)
         self._can_vector = send_frame is wire.send_frame
@@ -209,6 +223,18 @@ class _Channel:
         # data channels block until shutdown, not until an idle timeout:
         # an idle receiver parked in recv must not kill a healthy channel
         self.sock.settimeout(None)
+        self._crc = False
+        if self._can_vector:
+            # per-connection handshake *before* the receiver thread owns
+            # the socket: CRC verification is gated on this connection's
+            # negotiated caps (an old server just leaves caps empty)
+            try:
+                wire.negotiate(self.sock, formats=(self._fmt,),
+                               caps=wire.SUPPORTED_CAPS)
+            except (ConnectionError, OSError):
+                pass          # stays uncapped; frames still self-describe
+            self._crc = wire.CAP_CRC in wire.negotiated_caps(self.sock)
+        self._consecutive_crc = 0
         self.q: queue.Queue = queue.Queue()
         self._cond = threading.Condition()
         self._window = max(1, credits)
@@ -232,9 +258,10 @@ class _Channel:
         """Acquire one credit for ``item`` (blocking or opportunistic).
 
         Tri-state so the caller's requeue decision is unambiguous:
-        ``_FAILED`` means the item's transfer was failed here (dead or
-        closing channel — do not requeue); ``_DEFER`` (non-blocking
-        only) means no credit was free and the item is untouched."""
+        ``_FAILED`` means the channel is dead or closing (the caller
+        hands the untouched item to ``_handoff``); ``_DEFER``
+        (non-blocking only) means no credit was free and the item is
+        untouched."""
         t0 = time.perf_counter()
         with self._cond:
             if self._dead is None and not self._closing \
@@ -244,8 +271,6 @@ class _Channel:
                     and not self._closing:
                 self._cond.wait(0.5)
             if self._dead is not None or self._closing:
-                item.transfer.fail(
-                    self._dead or ConnectionError("channel closed"))
                 return self._FAILED
             self._unacked += 1
             self.stats.peak_unacked = max(self.stats.peak_unacked,
@@ -281,7 +306,24 @@ class _Channel:
             header["sided"] = 1
             header["size"] = len(item.view)
             payload = None
+        elif self._crc and len(item.view):
+            header["crc"] = wire.crc32(item.view)
         return header, payload
+
+    def _handoff(self, items, exc: BaseException) -> None:
+        """Route stripes a dead channel cannot carry: re-home them via the
+        group hook (degrade to fewer channels), or fail their transfers
+        when there is no hook / the group is closing."""
+        if not items:
+            return
+        with self._cond:
+            closing = self._closing
+        if self._on_fail is not None and not closing:
+            self.stats.failed_over += len(items)
+            self._on_fail(self, exc, items)
+            return
+        for it in items:
+            it.transfer.fail(exc)
 
     def _send_loop(self) -> None:
         while True:
@@ -289,9 +331,11 @@ class _Channel:
             if item is None:
                 return
             if self._dead is not None:
-                item.transfer.fail(self._dead)
+                self._handoff([item], self._dead)
                 continue
             if self._admit(item, block=True) is not self._ADMITTED:
+                self._handoff([item], self._dead
+                              or ConnectionError("channel closed"))
                 continue
             batch = [item]
             # opportunistic burst: drain further queued stripes while the
@@ -309,11 +353,13 @@ class _Channel:
                     admitted = self._admit(nxt, block=False)
                     if admitted is self._DEFER:
                         # out of credits, item untouched: requeue so it is
-                        # either sent later or failed by the top-of-loop
+                        # either sent later or re-homed by the top-of-loop
                         # dead-check — never silently dropped
                         self.q.put(nxt)
                         break
                     if admitted is self._FAILED:
+                        self._handoff([nxt], self._dead
+                                      or ConnectionError("channel closed"))
                         break
                     batch.append(nxt)
             frames = []
@@ -376,21 +422,49 @@ class _Channel:
                     self._cond.notify_all()
                 continue
             with self._inflight_lock:
-                item, t_sent = self._inflight.popleft() if self._inflight \
-                    else (None, None)
+                head = self._inflight[0][0] if self._inflight else None
+                # a dup ack that does not match the FIFO head is
+                # *unsolicited*: the server deduped a duplicated frame
+                # (fault-injected, or a stripe delivered both on its dying
+                # channel and on the one it was re-homed to). That frame
+                # never consumed a credit here, so skip it without popping
+                # or decrementing — popping would desync every later ack.
+                unsolicited = bool(h.get("dup")) and (
+                    head is None or head.idx != h.get("stripe_idx"))
+                item, t_sent = (None, None) if unsolicited else (
+                    self._inflight.popleft() if self._inflight
+                    else (None, None))
             with self._cond:
-                self._unacked -= 1
+                if not unsolicited:
+                    self._unacked -= 1
                 self._window = max(1, int(h.get("credits", self._window)))
                 self.stats.window = self._window
                 self._cond.notify_all()
+            if unsolicited:
+                continue
             if item is None:       # ack with no matching stripe: corrupt
                 self._fail(wire.ProtocolError("unmatched stripe ack"))
                 return
             self.stats.stripe_s += time.perf_counter() - t_sent
             if h.get("ok"):
+                self._consecutive_crc = 0
                 self.stats.nbytes += len(item.view)
                 self.stats.n_stripes += 1
                 item.transfer.stripe_done()
+            elif h.get("code") == "corrupt" or \
+                    "crc mismatch" in str(h.get("error") or ""):
+                # CRC rejection: the server dropped the stripe (it is NOT
+                # in stripes_seen), so resending is safe and required.
+                # After a run of consecutive rejections the binary path
+                # itself is suspect — degrade this channel to JSON frames
+                # (DESIGN.md §15 degradation ladder).
+                self.stats.crc_retries += 1
+                self._consecutive_crc += 1
+                if self._consecutive_crc >= _CRC_FALLBACK_AFTER \
+                        and self._fmt == wire.WIRE_BIN1:
+                    self._fmt = wire.WIRE_JSON
+                    self.stats.wire_fallbacks += 1
+                self.q.put(item)
             else:
                 item.transfer.fail(
                     RuntimeError(f"stripe rejected: {h.get('error')}"))
@@ -413,15 +487,34 @@ class _Channel:
                 self._cond.notify_all()
             inflight, self._inflight = list(self._inflight), \
                 collections.deque()
-        for item, _t in inflight:
-            item.transfer.fail(exc)
+        orphans = [item for item, _t in inflight]
+        # queued-but-unsent stripes would otherwise wait for the sender's
+        # top-of-loop dead-check; drain them now so re-homing is prompt
+        while True:
+            try:
+                nxt = self.q.get_nowait()
+            except queue.Empty:
+                break
+            if nxt is None:
+                self.q.put(None)    # keep the shutdown sentinel
+                break
+            orphans.append(nxt)
+        self._handoff(orphans, exc)
 
     def close(self) -> None:
         with self._cond:
             self._closing = True
             self._cond.notify_all()
         self.q.put(None)
-        self._sender.join(5.0)
+        # close() can run on this channel's own sender/receiver thread:
+        # when the *last* live channel dies, its _fail -> _adopt_orphans
+        # -> _rebuild_channels chain closes the old set (including
+        # itself) before the failing thread unwinds. Joining yourself
+        # raises and strands the orphans mid-handoff, so skip the
+        # self-join — the thread exits as soon as the unwind finishes.
+        me = threading.current_thread()
+        if self._sender is not me:
+            self._sender.join(5.0)
         try:
             self.sock.shutdown(2)
         except OSError:
@@ -430,7 +523,8 @@ class _Channel:
             self.sock.close()
         except OSError:
             pass
-        self._receiver.join(5.0)
+        if self._receiver is not me:
+            self._receiver.join(5.0)
 
 
 class ChannelGroup:
@@ -457,7 +551,8 @@ class ChannelGroup:
                  connect: Callable = wire.connect,
                  send_frame: Callable = wire.send_frame,
                  transfer_timeout: float = 300.0,
-                 wire_format: str = wire.WIRE_JSON):
+                 wire_format: str = wire.WIRE_JSON,
+                 retry: Optional[RetryPolicy] = None):
         if n_channels < 1:
             raise ValueError(f"n_channels must be >= 1, got {n_channels}")
         if stripe_bytes < 1:
@@ -473,9 +568,12 @@ class ChannelGroup:
         # cost model: they never negotiate the binary fast path
         self.wire_format = wire_format \
             if send_frame is wire.send_frame else wire.WIRE_JSON
+        self._retry = retry or RetryPolicy()
         self._channels: list[_Channel] = []
         self._ctrl = None                     # set once in open()
         self._ctrl_lock = threading.Lock()
+        self._rebuild_lock = threading.Lock()
+        self._retired: list[dict] = []        # stats of replaced channels
         self._rr = 0
         self._opened = False
         self._closed = False
@@ -494,7 +592,8 @@ class ChannelGroup:
             self.wire_format = wire.negotiate(self._ctrl)
         self._channels = [
             _Channel(i, self.addr, self.credits, self._connect,
-                     self._send_frame, wire_format=self.wire_format)
+                     self._send_frame, wire_format=self.wire_format,
+                     on_fail=self._adopt_orphans)
             for i in range(self.n_channels)
         ]
         self._opened = True
@@ -519,6 +618,82 @@ class ChannelGroup:
             except OSError:
                 pass
 
+    # -- failover -------------------------------------------------------
+    def _live_channels(self) -> list[_Channel]:
+        return [ch for ch in self._channels if ch._dead is None]
+
+    def _adopt_orphans(self, dead_ch: _Channel, exc: BaseException,
+                       items: list) -> None:
+        """Re-home a dead channel's queued + in-flight stripes onto the
+        survivors — the striped transfer collapses to fewer channels
+        instead of failing. A re-sent stripe the server already holds
+        comes back as a dup ack (idempotent), so replaying
+        maybe-delivered in-flight stripes is safe. Only when *every*
+        channel is dead is the set rebuilt from scratch; if that fails
+        too, the transfers fail with the rebuild error."""
+        if self._closed:
+            for it in items:
+                it.transfer.fail(exc)
+            return
+        live = self._live_channels()
+        if not live:
+            try:
+                live = self._rebuild_channels()
+            except (ConnectionError, OSError) as e:
+                for it in items:
+                    it.transfer.fail(e)
+                return
+        for i, it in enumerate(items):
+            tgt = live[i % len(live)]
+            tgt.stats.adopted += 1
+            tgt.q.put(it)
+
+    def _rebuild_channels(self) -> list[_Channel]:
+        """Every channel is dead: build a fresh set with backoff and swap
+        it in. Serialised on its own lock so concurrent handoffs elect one
+        rebuilder; latecomers adopt its result."""
+        with self._rebuild_lock:
+            live = self._live_channels()
+            if live:                    # another thread already rebuilt
+                return live
+            fresh: list[_Channel] = []
+            for attempt in self._retry.attempts("channel rebuild"):
+                fresh = []
+                try:
+                    for i in range(self.n_channels):
+                        fresh.append(_Channel(
+                            i, self.addr, self.credits, self._connect,
+                            self._send_frame,
+                            wire_format=self.wire_format,
+                            on_fail=self._adopt_orphans))
+                    break
+                except (ConnectionError, OSError) as e:
+                    for ch in fresh:    # all-or-nothing construction
+                        ch.close()
+                    attempt.backoff(e)  # raises RetryExhausted at the end
+            old, self._channels = self._channels, fresh
+            self._retired.extend(ch.stats.as_dict() for ch in old)
+            for ch in old:
+                ch.close()
+            return fresh
+
+    def _reopen_ctrl(self) -> None:
+        """Replace a dead control connection (stripe_open retry path).
+        The reconnect + re-handshake round-trip under the lock *is* the
+        serialisation against concurrent submitters."""
+        with self._ctrl_lock:  # lint: ignore[io-under-lock]
+            if self._ctrl is not None:
+                try:
+                    self._ctrl.close()
+                except OSError:
+                    pass
+                self._ctrl = None
+            ctrl = self._connect(self.addr)
+            if self._send_frame is wire.send_frame and \
+                    self.wire_format == wire.WIRE_BIN1:
+                self.wire_format = wire.negotiate(ctrl)
+            self._ctrl = ctrl
+
     # -- data plane -----------------------------------------------------
     def _plan_stripes(self, nbytes: int) -> list[tuple[int, int]]:
         """Stripe plan: at most ``stripe_bytes`` each, but small enough
@@ -531,7 +706,8 @@ class ChannelGroup:
         return plan_blocks(nbytes, stripe)
 
     def submit_dataset(self, name: str, dtype: str, buf,
-                       codec_info: Optional[dict] = None) -> _Transfer:
+                       codec_info: Optional[dict] = None,
+                       epoch: Optional[str] = None) -> _Transfer:
         """Asynchronously stripe one named buffer across all channels.
 
         Returns the :class:`_Transfer` tracker immediately after the
@@ -553,19 +729,39 @@ class ChannelGroup:
         flat = arr.reshape(-1).view(np.uint8)
         nbytes = flat.nbytes
         stripes = self._plan_stripes(nbytes)
-        # request/reply on the shared control conn must be serialized; the
-        # blocking round-trip under the lock is the serialization itself
-        with self._ctrl_lock:  # lint: ignore[io-under-lock]
-            h, _ = wire.request(
-                self._ctrl,
-                dict({"op": "stripe_open", "name": name, "dtype": dtype,
-                      "size": nbytes, "n_stripes": len(stripes),
-                      "credits": self.credits}, **(codec_info or {})))
+        req = dict({"op": "stripe_open", "name": name, "dtype": dtype,
+                    "size": nbytes, "n_stripes": len(stripes),
+                    "credits": self.credits}, **(codec_info or {}))
+        if epoch is not None:
+            req["epoch"] = epoch
+        for attempt in self._retry.attempts(f"stripe_open {name!r}"):
+            try:
+                # request/reply on the shared control conn must be
+                # serialized; the blocking round-trip under the lock is
+                # the serialization itself
+                with self._ctrl_lock:  # lint: ignore[io-under-lock]
+                    if self._ctrl is None:
+                        raise ConnectionError("control connection down")
+                    h, _ = wire.request(self._ctrl, req)
+                break
+            except (ConnectionError, OSError) as e:
+                try:
+                    self._reopen_ctrl()
+                except (ConnectionError, OSError):
+                    pass          # next attempt finds _ctrl None, retries
+                attempt.backoff(e)  # raises RetryExhausted when spent
         if not h.get("ok"):
             # typed: a gateway's quota/auth rejection surfaces as
             # QuotaExceededError/AuthError, not a generic RuntimeError
             from repro.gateway.tenancy import error_from_reply
             raise error_from_reply(h, "stripe_open failed")
+        if h.get("dup"):
+            # replayed epoch the server already acked: nothing to send.
+            # The zero-stripe transfer completes in its constructor, so
+            # account for it *before* building it.
+            with self._outstanding_cond:
+                self._outstanding += 1
+            return _Transfer(name, 0, nbytes, on_done=self._transfer_done)
         file_id = h["file_id"]
         for ch in self._channels:       # adopt the receiver's current grant
             ch.set_window(int(h.get("credits", self.credits)))
@@ -579,12 +775,15 @@ class ChannelGroup:
         tr = _Transfer(name, len(stripes), nbytes,
                        on_done=self._transfer_done, writer=writer)
         # round-robin with a moving base so concurrent datasets do not all
-        # pile their first (and for short writes, only) stripe on channel 0
+        # pile their first (and for short writes, only) stripe on channel 0.
+        # Route over live channels only — stripes queued on a dead channel
+        # would just bounce through its handoff path.
+        live = self._live_channels() or self._channels
         with self._ctrl_lock:
             base, self._rr = self._rr, (self._rr + len(stripes)) \
-                % self.n_channels
+                % len(live)
         for i, (off, size) in enumerate(stripes):
-            ch = self._channels[(base + i) % self.n_channels]
+            ch = live[(base + i) % len(live)]
             ch.q.put(_Stripe(tr, file_id, name, i, len(stripes), off,
                              flat[off:off + size], writer,
                              enc=codec_info is not None))
@@ -624,4 +823,6 @@ class ChannelGroup:
 
     # -- introspection --------------------------------------------------
     def channel_stats(self) -> list[dict]:
-        return [ch.stats.as_dict() for ch in self._channels]
+        """Current channels plus any retired (failed-over) generations."""
+        return list(self._retired) + \
+            [ch.stats.as_dict() for ch in self._channels]

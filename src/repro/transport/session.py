@@ -23,6 +23,8 @@ session owns:
 """
 from __future__ import annotations
 
+import queue
+import secrets
 import threading
 import time
 from typing import Callable, Optional, Sequence
@@ -50,6 +52,65 @@ class DatasetFuture:
 
     def add_done_callback(self, fn: Callable) -> None:
         self._handle.add_done_callback(lambda _h: fn(self))
+
+
+class _ReplayHandle:
+    """TaskHandle-shaped facade whose completion survives replays.
+
+    The journal swaps the *inner* transport handle on every replay; this
+    outer handle is what the :class:`DatasetFuture` holds, and it
+    completes exactly once — with the first definitive outcome."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.done = threading.Event()
+        self.result = None
+        self.error: Optional[BaseException] = None
+        self._lock = threading.Lock()
+        self._callbacks: list = []
+
+    def complete(self, result=None, error=None) -> None:
+        with self._lock:
+            if self.done.is_set():
+                return
+            self.result, self.error = result, error
+            callbacks, self._callbacks = self._callbacks, []
+            self.done.set()
+        for fn in callbacks:
+            try:
+                fn(self)
+            except Exception:  # noqa: BLE001 — callbacks must not break acks
+                pass
+
+    def wait(self, timeout: Optional[float] = None):
+        if not self.done.wait(timeout):
+            raise TimeoutError(f"transfer {self.name!r} still in flight")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    def add_done_callback(self, fn: Callable) -> None:
+        with self._lock:
+            if not self.done.is_set():
+                self._callbacks.append(fn)
+                return
+        fn(self)
+
+
+class _Journaled:
+    """One in-flight journal entry: everything needed to replay a write."""
+
+    __slots__ = ("name", "dtype", "arr", "epoch", "outer", "deadline",
+                 "attempts")
+
+    def __init__(self, name, dtype, arr, epoch, outer, deadline):
+        self.name = name
+        self.dtype = dtype
+        self.arr = arr              # the pinned buffer — the replay source
+        self.epoch = epoch
+        self.outer = outer
+        self.deadline = deadline
+        self.attempts = 0
 
 
 class TransferSession:
@@ -80,6 +141,20 @@ class TransferSession:
         self._cond = threading.Condition()
         self._inflight = 0                        # pinned, not yet completed
         self._pinned: dict[int, object] = {}      # future id -> buffer ref
+        # in-flight journal (DESIGN.md §15): every submitted dataset keeps
+        # its pinned buffer under a monotonic (name, epoch) identity until
+        # acked; a retryable failure re-submits it through the replay
+        # worker and the receiver dedups on the epoch. Active only when
+        # the engine can thread the epoch through (supports_replay).
+        self._journal_on = bool(self.cfg.journal and
+                                self.transport.supports_replay)
+        self._journal: dict[str, _Journaled] = {}     # epoch -> entry
+        self._epoch_tag = secrets.token_hex(4)
+        self._epoch_seq = 0
+        self._max_replays = max(1, self.cfg.retry)
+        self._replay_q: queue.Queue = queue.Queue()
+        self._replay_worker: Optional[threading.Thread] = None
+        self._close_evt = threading.Event()
 
     # -- lifecycle ------------------------------------------------------
     def open(self) -> "TransferSession":
@@ -89,6 +164,10 @@ class TransferSession:
         self.transport.open()
         self.stats.open_s = time.perf_counter() - t
         self._opened = True
+        if self._journal_on:
+            self._replay_worker = threading.Thread(
+                target=self._replay_loop, name="session-replay", daemon=True)
+            self._replay_worker.start()
         self._emit("open")
         return self
 
@@ -105,6 +184,12 @@ class TransferSession:
         if self._closed or not self._opened:
             self._closed = True
             return
+        self._close_evt.set()
+        if self._replay_worker is not None:
+            self._replay_q.put(None)              # shutdown sentinel
+            self._replay_worker.join(5.0)
+            self._replay_worker = None
+        self._collect_durability_stats()
         self._collect_channel_stats()
         self._collect_page_stats()
         self._collect_gateway_stats()
@@ -147,13 +232,31 @@ class TransferSession:
         self.stats.write_wait_s += time.perf_counter() - t_wait
         if self._t0 is None:
             self._t0 = time.perf_counter()
+        epoch = None
+        if self._journal_on:
+            with self._cond:
+                self._epoch_seq += 1
+                epoch = f"{self._epoch_tag}-{self._epoch_seq}"
         try:
-            handle = self.transport.write(name, dtype, arr)
+            if epoch is not None:
+                entry = _Journaled(
+                    name, dtype, arr, epoch, _ReplayHandle(name),
+                    deadline=(time.monotonic() + self.cfg.deadline_s
+                              if self.cfg.deadline_s else None))
+                with self._cond:
+                    self._journal[epoch] = entry
+                inner = self.transport.write_epoch(name, dtype, arr, epoch)
+                inner.add_done_callback(self._journal_chain(entry))
+                handle = entry.outer
+            else:
+                handle = self.transport.write(name, dtype, arr)
         except BaseException:
             # striped transports can fail synchronously (stripe_open is a
             # control RTT); the reserved inflight bytes must be returned
             # or later writes block against a phantom reservation
             with self._cond:
+                if epoch is not None:
+                    self._journal.pop(epoch, None)
                 self._inflight -= size
                 self._cond.notify_all()
             raise
@@ -177,11 +280,94 @@ class TransferSession:
                 self._inflight -= fut.nbytes
             self._cond.notify_all()
 
+    # -- in-flight journal (DESIGN.md §15) -------------------------------
+    def _journal_chain(self, entry: _Journaled) -> Callable:
+        """Done-callback for one inner transport handle: settle the entry
+        (ack, replay, or give up) when the attempt finishes."""
+        return lambda h: self._settle(entry, getattr(h, "error", None),
+                                      getattr(h, "result", None))
+
+    def _settle(self, entry: _Journaled, err, result=None) -> None:
+        if err is None:
+            with self._cond:
+                self._journal.pop(entry.epoch, None)
+                self._cond.notify_all()
+            entry.outer.complete(result=result)
+            return
+        retryable = isinstance(err, (ConnectionError, TimeoutError, OSError))
+        expired = entry.deadline is not None and \
+            time.monotonic() > entry.deadline
+        if retryable and not expired and \
+                entry.attempts < self._max_replays and \
+                not self._close_evt.is_set():
+            self._replay_q.put(entry.epoch)
+            return
+        with self._cond:
+            self._journal.pop(entry.epoch, None)
+            self._cond.notify_all()
+        entry.outer.complete(error=err)
+
+    def _replay_loop(self) -> None:
+        """Single worker re-submitting failed journal entries with
+        exponential backoff. The receiver dedups on (name, epoch), so a
+        replay of a write whose ack was merely lost is a no-op there."""
+        while True:
+            epoch = self._replay_q.get()
+            if epoch is None:
+                return
+            with self._cond:
+                entry = self._journal.get(epoch)
+            if entry is None:
+                continue                 # settled while queued
+            entry.attempts += 1
+            self.stats.replays += 1
+            delay = min(2.0, 0.05 * (1 << min(entry.attempts, 6)))
+            if self._close_evt.wait(delay):
+                return
+            self._emit("replay", name=entry.name, epoch=epoch,
+                       attempt=entry.attempts)
+            try:
+                inner = self.transport.write_epoch(
+                    entry.name, entry.dtype, entry.arr, epoch, replay=True)
+            except Exception as e:  # noqa: BLE001 — settle decides
+                self._settle(entry, e)
+                continue
+            inner.add_done_callback(self._journal_chain(entry))
+
+    def _collect_durability_stats(self) -> None:
+        """Pull the receiver's replay-dedup counter into the stats (how
+        many replays it recognised as already-acked epochs)."""
+        if not self._journal_on:
+            return
+        try:
+            ss = self.transport.server_stats()
+        except Exception:  # noqa: BLE001 — stats must not break close
+            return
+        if isinstance(ss, dict):
+            self.stats.replay_dups = int(ss.get("replay_dups") or 0)
+
     # -- barriers -------------------------------------------------------
     def sync(self, timeout: Optional[float] = None) -> None:
-        """Block until all written buffers reached staging."""
+        """Block until all written buffers reached staging — including
+        journaled writes still being replayed after a reconnect."""
         self._check_live()
+        deadline = time.monotonic() + timeout if timeout else None
         self.transport.sync(timeout)
+        if self._journal_on:
+            # a replaying write is out of the transport's queues (its
+            # failed attempt completed there) but not yet durable — the
+            # sync contract covers it too
+            with self._cond:
+                while self._journal:
+                    remaining = None
+                    if deadline is not None:
+                        remaining = deadline - time.monotonic()
+                        if remaining <= 0:
+                            raise TimeoutError(
+                                f"{len(self._journal)} journaled writes "
+                                "still replaying")
+                    self._cond.wait(min(remaining, 0.25)
+                                    if remaining else 0.25)
         # only the sync that follows new writes defines the phase timing —
         # the redundant sync on clean __exit__ must not inflate it
         if self._t0 is not None and self._unsynced:

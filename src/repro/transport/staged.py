@@ -23,6 +23,11 @@ from repro.transport.base import Transport, register_transport
 class StagedTransport(Transport):
     """Staged-RDMA egress over libstaging's Communicator."""
 
+    # the Communicator threads (name, epoch) through write_req /
+    # stripe_open / batch items and the server dedups on it — the
+    # session's in-flight journal can replay safely (DESIGN.md §15)
+    supports_replay = True
+
     def __init__(self, cfg):
         super().__init__(cfg)
         self._staging: Optional[StagingServer] = None   # owned, if any
@@ -66,7 +71,9 @@ class StagedTransport(Transport):
                                  linger_ms=self.cfg.linger_ms,
                                  gateway=gateway, tenant=self.cfg.tenant,
                                  codec=self.cfg.codec,
-                                 decode_at=self.cfg.decode_at)
+                                 decode_at=self.cfg.decode_at,
+                                 retry=self.cfg.retry,
+                                 deadline_s=self.cfg.deadline_s)
         self._ctrl = wire.connect(addr)
         if gateway and self.cfg.tenant:
             # bind the control conn to the tenant for proxied/DDL ops
@@ -88,6 +95,11 @@ class StagedTransport(Transport):
     # -- data plane -----------------------------------------------------
     def write(self, name: str, dtype: str, buf):
         return self.comm.submit(name, dtype, buf)
+
+    def write_epoch(self, name: str, dtype: str, buf, epoch: str,
+                    replay: bool = False):
+        return self.comm.submit(name, dtype, buf, epoch=epoch,
+                                replay=replay)
 
     def sync(self, timeout: Optional[float] = None) -> None:
         self.comm.sync(timeout)

@@ -1,0 +1,410 @@
+"""Chaos suite for the fault-injection harness (DESIGN.md §15).
+
+Deterministic, seeded fault plans drive the wire layer (drop / delay /
+dup / corrupt / partition) and the process scheduler (kill), and every
+test asserts the durability contract end to end: acked datasets are
+bit-identical at SAVIME, replays never double-count (server (name,
+epoch) dedup), and sessions finish within their deadline instead of
+hanging. Also covers the shared RetryPolicy, the bin1->JSON degradation
+ladder, ChannelGroup single-channel death (survivors finish, stats
+record the failover, drain does not deadlock), gateway re-homing after
+a backend fail-out, and the typed Subscription / AnalysisSession
+errors.
+"""
+import json
+import time
+
+import numpy as np
+import pytest
+
+from repro.analysis import AnalysisSession, SubscriptionClosed, tar
+from repro.core import SavimeServer, StagingServer, wire
+from repro.core.retry import RetryExhausted, RetryPolicy
+from repro.faults import (FaultInjector, FaultPlan, FaultRule, injected)
+from repro.gateway import GatewayClient, StagingPool
+from repro.transport import ChannelGroup, TransferSession, TransportConfig
+from repro.transport import channels as channels_mod
+
+pytestmark = pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnraisableExceptionWarning")
+
+
+@pytest.fixture()
+def savime():
+    srv = SavimeServer().start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture()
+def staging(savime):
+    srv = StagingServer(savime.addr, mem_capacity=256 << 20,
+                        send_threads=2).start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture()
+def payload_stripes(monkeypatch):
+    """Force the payload data plane: without a locally-mappable region
+    the stripes carry their bytes on the socket (where the injector can
+    corrupt them) instead of the one-sided mmap store."""
+    monkeypatch.setattr(channels_mod, "writer_for_reply", lambda h, n: None)
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy: the shared backoff engine
+# ---------------------------------------------------------------------------
+
+
+def test_retry_policy_exhaustion_is_typed():
+    pol = RetryPolicy(retries=2, base_s=0.0, seed=1)
+    tries = 0
+    with pytest.raises(RetryExhausted) as ei:
+        for attempt in pol.attempts("flaky op"):
+            tries += 1
+            attempt.backoff(OSError("boom"))
+    assert tries == 3                      # retries=2 -> 3 attempts
+    assert isinstance(ei.value, ConnectionError)   # catchable as the base
+    assert isinstance(ei.value.last, OSError)      # root cause preserved
+    assert "flaky op" in str(ei.value)
+
+
+def test_retry_policy_deadline_budget():
+    pol = RetryPolicy(retries=1000, base_s=0.2, cap_s=0.2,
+                      deadline_s=0.05, seed=1)
+    t0 = time.monotonic()
+    with pytest.raises(RetryExhausted) as ei:
+        for attempt in pol.attempts("stuck op"):
+            attempt.backoff(ConnectionError("down"))
+    assert time.monotonic() - t0 < 2.0     # budget, not 1000 retries
+    assert "deadline" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan: the schedule DSL
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_dsl_and_json_roundtrip(tmp_path):
+    spec = "seed=42;drop:op=stripe,prob=0.01;kill:target=staging:0,at_s=0.5"
+    plan = FaultPlan.parse(spec)
+    assert plan.seed == 42
+    drop, kill = plan.rules
+    assert (drop.kind, drop.op, drop.prob) == ("drop", "stripe", 0.01)
+    assert (kill.kind, kill.target, kill.at_s) == ("kill", "staging:0", 0.5)
+    assert plan.wire_rules == [drop] and plan.kill_rules == [kill]
+    p = tmp_path / "plan.json"
+    p.write_text(json.dumps(plan.encode()))
+    assert FaultPlan.parse(str(p)).encode() == plan.encode()
+
+
+def test_fault_plan_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        FaultPlan.parse("explode:prob=1.0")          # unknown kind
+    with pytest.raises(ValueError):
+        FaultPlan.parse("kill:at_s=1.0")             # kill needs target=
+    with pytest.raises(ValueError):
+        FaultPlan.parse("drop:bogus=3")              # unknown rule key
+
+
+def test_injector_is_deterministic_per_seed():
+    def firing_pattern(spec):
+        inj = FaultInjector(FaultPlan.parse(spec))
+        return [i for i in range(200)
+                if inj._decide("peer:1", {"op": "stripe"}) is not None]
+
+    spec9 = "seed=9;corrupt:op=stripe,prob=0.3"
+    pattern = firing_pattern(spec9)
+    assert pattern                                   # fires at all
+    assert pattern == firing_pattern(spec9)          # same seed: identical
+    assert pattern != firing_pattern("seed=10;corrupt:op=stripe,prob=0.3")
+
+
+# ---------------------------------------------------------------------------
+# drop: connection-level retry, then the in-flight journal
+# ---------------------------------------------------------------------------
+
+
+def test_drop_absorbed_by_connection_retry(savime, staging):
+    """A single injected link death is absorbed inside the write's own
+    retry loop — no journal replay, no data loss, no duplicates."""
+    plan = FaultPlan.parse("seed=3;drop:op=write_req,nth=2")
+    rng = np.random.default_rng(3)
+    bufs = {f"dr{i}": rng.standard_normal(2048) for i in range(4)}
+    with injected(plan, scope=[staging.addr]) as inj:
+        cfg = TransportConfig(staging_addr=staging.addr, io_threads=2)
+        with TransferSession("rdma_staged", cfg) as sess:
+            futs = [sess.write(n, b, dtype="float64")
+                    for n, b in bufs.items()]
+            sess.sync(timeout=30)
+            assert all(f.done() for f in futs)
+    assert inj.fired.get("drop") == 1
+    assert sess.stats.replay_dups == 0
+    for n, b in bufs.items():
+        got = np.frombuffer(savime.engine.datasets[n], dtype=np.float64)
+        assert np.array_equal(got, b), n
+
+
+def test_journal_replays_after_retries_exhausted(savime, staging):
+    """With the per-write retry budget at zero, three consecutive link
+    deaths exhaust the transport's attempts — the session's in-flight
+    journal then replays the pinned buffer and the write still lands."""
+    # rule order matters: _decide stops at the first firing rule, so only
+    # rules *before* it keep counting that frame — listing nth=3,2,1 makes
+    # the three rules fire on three consecutive write_req frames
+    plan = FaultPlan(seed=4, rules=[
+        FaultRule("drop", op="write_req", nth=k) for k in (3, 2, 1)])
+    rng = np.random.default_rng(4)
+    buf = rng.standard_normal(4096)
+    with injected(plan, scope=[staging.addr]) as inj:
+        cfg = TransportConfig(staging_addr=staging.addr, io_threads=1,
+                              retry=0)
+        with TransferSession("rdma_staged", cfg) as sess:
+            fut = sess.write("journaled", buf, dtype="float64")
+            sess.sync(timeout=30)
+            assert fut.done()
+    assert inj.fired.get("drop") == 3
+    assert sess.stats.replays >= 1
+    got = np.frombuffer(savime.engine.datasets["journaled"],
+                        dtype=np.float64)
+    assert np.array_equal(got, buf)
+
+
+def test_server_dedups_replayed_epochs(savime, staging):
+    """The receiver's (name, epoch) log: a replay of an already-acked
+    write acks `dup` without ingesting a second copy."""
+    payload = bytes(range(256)) * 8
+    open_req = {"op": "stripe_open", "name": "epoch_d", "dtype": "uint8",
+                "size": len(payload), "n_stripes": 1, "credits": 4,
+                "epoch": "aa-1"}
+    s = wire.connect(staging.addr)
+    try:
+        h, _ = wire.request(s, open_req)
+        assert h["ok"] and not h.get("dup")
+        a, _ = wire.request(s, {"op": "stripe", "file_id": h["file_id"],
+                                "stripe_idx": 0, "n_stripes": 1,
+                                "offset": 0}, payload)
+        assert a["ok"] and a["done"]
+        before = staging.stats["datasets"]
+        h2, _ = wire.request(s, open_req)       # the replay
+        assert h2["ok"] and h2["dup"]
+        assert staging.stats["datasets"] == before      # not double-counted
+        assert staging.stats["replay_dups"] >= 1
+        staging.drain(10)
+        got = bytes(savime.engine.datasets["epoch_d"].view(np.uint8))
+        assert got == payload
+    finally:
+        s.close()
+
+
+def test_partition_blocks_connects_then_heals(savime, staging):
+    plan = FaultPlan(seed=2)
+    with injected(plan, scope=[staging.addr]) as inj:
+        inj.partition(None, duration_s=30)
+        with pytest.raises((ConnectionError, OSError)):
+            wire.connect(staging.addr)
+        inj.heal()
+        s = wire.connect(staging.addr)
+        try:
+            h, _ = wire.request(s, {"op": "stats"})
+            assert h["ok"]
+        finally:
+            s.close()
+    assert inj.fired.get("partition") == 1
+
+
+# ---------------------------------------------------------------------------
+# corrupt: CRC rejection, resend, and the bin1 -> JSON degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_corrupt_stripes_detected_and_resent(savime, staging,
+                                             payload_stripes):
+    """~5% random frame corruption on a striped bin1 transfer: every
+    mangled stripe is CRC-rejected and resent; the data that lands is
+    bit-identical."""
+    plan = FaultPlan.parse("seed=11;corrupt:op=stripe,prob=0.05,flips=3")
+    cfg = TransportConfig(staging_addr=staging.addr, n_channels=2,
+                          wire_format="bin1", stripe_bytes=8 << 10,
+                          io_threads=2)
+    rng = np.random.default_rng(11)
+    bufs = {f"cr{i}": rng.standard_normal(8192) for i in range(10)}
+    with injected(plan, scope=[staging.addr]) as inj:
+        with TransferSession("rdma_staged", cfg) as sess:
+            for n, b in bufs.items():
+                sess.write(n, b, dtype="float64")
+            sess.sync(timeout=60)
+    assert inj.fired.get("corrupt", 0) >= 1
+    assert staging.stats["crc_errors"] == inj.fired["corrupt"]
+    assert sum(c["crc_retries"] for c in sess.stats.channels) == \
+        staging.stats["crc_errors"]
+    for n, b in bufs.items():
+        got = np.frombuffer(savime.engine.datasets[n], dtype=np.float64)
+        assert np.array_equal(got, b), n
+
+
+def test_bin1_falls_back_to_json_after_persistent_crc(savime, staging,
+                                                      payload_stripes):
+    """Three consecutive CRC rejections mark the binary path itself as
+    suspect: the channel degrades to JSON frames and the transfer still
+    completes intact (DESIGN.md §15 degradation ladder)."""
+    # nth=3,2,1 ordering (see the journal test) + a credit window of one:
+    # the first three stripe frames on the wire are mangled back-to-back,
+    # so the rejections are guaranteed consecutive
+    plan = FaultPlan(seed=1, rules=[
+        FaultRule("corrupt", op="stripe", nth=k) for k in (3, 2, 1)])
+    rng = np.random.default_rng(12)
+    arr = rng.integers(0, 255, 8192, dtype=np.uint8)
+    with injected(plan, scope=[staging.addr]) as inj:
+        group = ChannelGroup(staging.addr, n_channels=1,
+                             stripe_bytes=2 << 10, credits=1,
+                             wire_format="bin1").open()
+        try:
+            assert group.send_dataset("fallback_d", "uint8", arr,
+                                      timeout=30) == arr.nbytes
+            stats = group.channel_stats()
+        finally:
+            group.close()
+    assert inj.fired.get("corrupt") == 3
+    assert staging.stats["crc_errors"] == 3
+    assert sum(c["crc_retries"] for c in stats) == 3
+    assert sum(c["wire_fallbacks"] for c in stats) == 1
+    staging.drain(10)
+    got = bytes(savime.engine.datasets["fallback_d"].view(np.uint8))
+    assert got == arr.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# channel death: survivors adopt the orphans, no drain deadlock
+# ---------------------------------------------------------------------------
+
+
+def test_channel_death_survivors_finish(savime, staging):
+    """One of three channels dies mid-stripe: the orphaned stripes are
+    adopted by the survivors, stats record the failover on both sides,
+    the data is intact, and drain() completes without deadlocking."""
+    plan = FaultPlan(seed=5, rules=[FaultRule("drop", op="stripe", nth=4)])
+    rng = np.random.default_rng(5)
+    arr = rng.integers(0, 255, 96 * 1024, dtype=np.uint8)   # 24 stripes
+    with injected(plan, scope=[staging.addr]) as inj:
+        group = ChannelGroup(staging.addr, n_channels=3,
+                             stripe_bytes=4 << 10, credits=2).open()
+        try:
+            assert group.send_dataset("failover_d", "uint8", arr,
+                                      timeout=30) == arr.nbytes
+            stats = group.channel_stats()
+        finally:
+            group.close()
+    assert inj.fired.get("drop") == 1
+    assert sum(c["failed_over"] for c in stats) >= 1
+    assert sum(c["adopted"] for c in stats) >= 1
+    staging.drain(10)                       # must not deadlock
+    got = bytes(savime.engine.datasets["failover_d"].view(np.uint8))
+    assert got == arr.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# gateway: backend death mid-session, zero-loss re-homing
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_backend_death_rehoming_zero_loss():
+    """Kill one staging backend mid-session: unacked writes re-admit onto
+    the rebuilt ring and land on the survivor; everything previously
+    drained stays queryable (the dead backend's SAVIME survives); the
+    gateway's parity totals never double-charge a replayed epoch."""
+    pool = StagingPool(2, health_interval=0.05).start()
+    try:
+        rng = np.random.default_rng(7)
+        phase1 = {f"gwA{i}": rng.standard_normal(2048) for i in range(8)}
+        phase2 = {f"gwB{i}": rng.standard_normal(2048) for i in range(12)}
+        plan = FaultPlan(seed=0, rules=[
+            FaultRule("kill", target="staging:0", at_s=0.05)])
+        cfg = TransportConfig(gateway_addr=pool.addr, io_threads=2,
+                              retry=8)
+        with pool.with_faults(plan) as harness:
+            with TransferSession("rdma_staged", cfg) as sess:
+                for n, b in phase1.items():
+                    sess.write(n, b, dtype="float64")
+                sess.sync(timeout=30)
+                sess.drain(timeout=30)
+                deadline = time.monotonic() + 5
+                while not harness.scheduler.killed and \
+                        time.monotonic() < deadline:
+                    time.sleep(0.02)
+                assert harness.scheduler.killed == ["staging:0"]
+                for n, b in phase2.items():
+                    sess.write(n, b, dtype="float64")
+                sess.sync(timeout=60)
+                sess.drain(timeout=60)
+            gw = sess.stats.gateway
+        union = {}
+        for sv in pool.savimes:
+            union.update(sv.engine.datasets)
+        for n, b in {**phase1, **phase2}.items():
+            got = np.frombuffer(union[n], dtype=np.float64)
+            assert np.array_equal(got, b), n
+        assert gw["live_backends"] == 1
+        assert gw["totals"]["admitted_datasets"] == len(phase1) + len(phase2)
+        assert gw["readmits"] >= 1          # retried writes re-admitted
+    finally:
+        pool.stop()
+
+
+def test_gateway_readmit_accounting():
+    """A re-admit of the same (name, epoch) is dedup'd: no double charge
+    in the parity totals, and the reply is flagged dup."""
+    pool = StagingPool(2).start()
+    try:
+        gc = GatewayClient(pool.addr)
+        try:
+            a1 = gc.admit("ds_x", 1024, epoch="aa-1")
+            a2 = gc.admit("ds_x", 1024, epoch="aa-1")
+            assert a1 == a2
+            st = gc.stats()
+            assert st["totals"]["admitted_datasets"] == 1
+            assert st["totals"]["admitted_bytes"] == 1024
+            assert st["readmits"] == 1
+        finally:
+            gc.close()
+    finally:
+        pool.stop()
+
+
+# ---------------------------------------------------------------------------
+# analysis side: typed server-gone errors
+# ---------------------------------------------------------------------------
+
+
+def test_subscription_closed_vs_timeout(savime):
+    """poll() returning None means quiet; a dead server raises the typed
+    SubscriptionClosed and latches .closed."""
+    with AnalysisSession(savime.addr) as an:
+        sub = an.watch("")
+        try:
+            assert sub.poll(0.05) is None       # timeout: just quiet
+            assert not sub.closed
+            savime.stop()
+            with pytest.raises(SubscriptionClosed):
+                sub.poll(5.0)                   # EOF, not a 5s wait
+            assert sub.closed
+            with pytest.raises(SubscriptionClosed):
+                sub.poll(0.01)                  # latched
+            assert list(sub) == []              # iteration ends cleanly
+        finally:
+            sub.close()
+
+
+def test_analysis_session_retry_exhausted(savime):
+    """Idempotent queries against a dead server surface the typed
+    RetryExhausted after the shared policy's jittered attempts."""
+    an = AnalysisSession(savime.addr, retries=2, retry_backoff_s=0.01).open()
+    try:
+        an.execute('create_tar(rt, "x:0:3", "v:float64")')
+        savime.stop()
+        with pytest.raises(RetryExhausted):
+            an.execute(tar("rt").attr("v").select())
+        assert an.stats.n_retries == 3          # retries=2 -> 3 attempts
+    finally:
+        an.close()

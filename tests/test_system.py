@@ -206,6 +206,75 @@ def test_supervisor_restores_from_checkpoint(tmp_path):
     assert np.allclose(np.asarray(out["w"]), 7.0)
 
 
+def test_supervisor_restart_budget_exceeded(tmp_path):
+    """Burning through max_restarts raises the typed error, and the
+    message carries the last committed checkpoint step (enough to resume
+    the run by hand)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime import (InjectedFailure, RestartBudgetExceeded,
+                               Supervisor, SupervisorConfig)
+
+    def step_fn(state, batch):
+        if int(state["step"]) >= 4:
+            raise InjectedFailure("poisoned step")
+        new = {"w": state["w"] + batch["x"], "step": state["step"] + 1}
+        return new, {"loss": jnp.sum(new["w"])}, {}
+
+    ckpt = CheckpointManager(str(tmp_path), async_writes=False)
+    sup = Supervisor(step_fn, ckpt, SupervisorConfig(ckpt_every=2,
+                                                     max_restarts=2))
+    state = {"w": jnp.zeros(4), "step": jnp.zeros((), jnp.int32)}
+    batches = iter(lambda: {"x": jnp.ones(4)}, None)
+    abstract = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    with pytest.raises(RestartBudgetExceeded) as ei:
+        sup.run(state, batches, 8, abstract_state=abstract)
+    assert sup.restarts == 3
+    assert ei.value.last_checkpoint_step == 4
+    assert "step 4" in str(ei.value)
+    assert "max_restarts=2" in str(ei.value)
+
+
+def test_supervisor_fail_at_composes_with_staging_checkpoint(
+        tmp_path, savime, staging):
+    """fail_at injection + a staging-path (sink-backed) checkpoint: the
+    run restores from the analyzable checkpoint and finishes, and the
+    checkpoint shards are queryable at SAVIME."""
+    import jax
+    import jax.numpy as jnp
+    from repro.checkpoint import CheckpointManager
+    from repro.runtime import Supervisor, SupervisorConfig
+
+    sink = InTransitSink(staging.addr, InTransitConfig(tar_prefix="ckpt"))
+    try:
+        def step_fn(state, batch):
+            new = {"w": state["w"] + batch["x"],
+                   "step": state["step"] + 1}
+            return new, {"loss": jnp.sum(new["w"])}, {}
+
+        ckpt = CheckpointManager(str(tmp_path), sink=sink,
+                                 async_writes=False)
+        sup = Supervisor(step_fn, ckpt, SupervisorConfig(ckpt_every=2,
+                                                         max_restarts=2))
+        state = {"w": jnp.zeros(4), "step": jnp.zeros((), jnp.int32)}
+        batches = iter(lambda: {"x": jnp.ones(4)}, None)
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        out = sup.run(state, batches, 5, abstract_state=abstract,
+                      fail_at={3})
+        assert int(out["step"]) == 5
+        assert sup.restarts == 1
+        assert np.allclose(np.asarray(out["w"]), 5.0)
+        sink.flush()
+        direct = SavimeClient(savime.addr)
+        tars = str(direct.run("list_tars()"))
+        assert "ckpt_" in tars, "staged checkpoint shards should be queryable"
+    finally:
+        sink.close()
+
+
 def test_checkpoint_reshard_roundtrip(tmp_path):
     import jax
     import jax.numpy as jnp
